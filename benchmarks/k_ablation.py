@@ -1,0 +1,44 @@
+"""Ablation of the paper's max_consistent = 4 design choice (Section 4: "the
+size of the most consistent mini-batches is generally not more than 4 to keep
+the algorithm efficient"). Sweeps the replay budget k for gSSGD."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core.parameter_server import PSConfig, train_ps
+from repro.data import load_dataset, train_test_split
+
+KS = [0, 1, 2, 4, 8, 10]
+
+
+def sweep(dataset="pima", runs=10, epochs=50):
+    X, y, kcls = load_dataset(dataset, seed=0)
+    out = {}
+    for k in KS:
+        accs = []
+        for run in range(runs):
+            Xtr, ytr, Xte, yte = train_test_split(X, y, seed=run)
+            cfg = PSConfig(mode="ssgd", guided=k > 0, rho=10, epochs=epochs,
+                           seed=run, max_consistent=max(k, 1))
+            res = train_ps(Xtr, ytr, kcls, cfg, Xte, yte)
+            accs.append(res["test_accuracy"] * 100)
+        out[f"k={k}"] = {"mean": float(np.mean(accs)), "std": float(np.std(accs))}
+        print(f"  {dataset:16s} k={k:2d} acc={out[f'k={k}']['mean']:5.1f}±{out[f'k={k}']['std']:3.1f}",
+              flush=True)
+    return out
+
+
+def main(runs=10, epochs=50):
+    results = {ds: sweep(ds, runs, epochs) for ds in ("pima", "liver_filtered")}
+    import os
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/k_ablation.json", "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

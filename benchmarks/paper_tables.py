@@ -1,0 +1,129 @@
+"""Tables 2-5 of the paper: best / average classification accuracy for each
+algorithm on the 9 UCI-analog datasets, with the paper's protocol (Table 1):
+50 epochs, eta=0.2, rho=10, 80:20 train/test, 80:20 train/validation, N runs,
+quartile-trimmed tolerance, Wilcoxon signed-rank significance (scipy is not on
+the image: we implement the exact-distribution signed-rank test for small N).
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import math
+
+import numpy as np
+
+from repro.core.parameter_server import algo_config, train_ps
+from repro.data import DATASETS, load_dataset, train_test_split
+
+CANONICAL = ["SGD", "gSGD", "SSGD", "gSSGD", "ASGD", "gASGD"]
+VARIANTS = ["SSGD", "gSSGD", "SRMSprop", "gSRMSprop", "SAdagrad", "gSAdagrad"]
+
+
+def wilcoxon_signed_rank(a, b) -> float:
+    """Two-tailed Wilcoxon signed-rank p-value (exact for n<=12, else normal)."""
+    d = np.asarray(a, float) - np.asarray(b, float)
+    d = d[d != 0]
+    n = len(d)
+    if n == 0:
+        return 1.0
+    ranks = np.argsort(np.argsort(np.abs(d))) + 1.0
+    # average ties
+    absd = np.abs(d)
+    for v in np.unique(absd):
+        m = absd == v
+        if m.sum() > 1:
+            ranks[m] = ranks[m].mean()
+    w_pos = ranks[d > 0].sum()
+    w_neg = ranks[d < 0].sum()
+    w = min(w_pos, w_neg)
+    if n <= 12:  # exact enumeration
+        total = 0
+        count = 0
+        for signs in itertools.product([0, 1], repeat=n):
+            s = sum(r for r, sg in zip(ranks, signs) if sg)
+            total += 1
+            if s <= w:
+                count += 1
+        return min(1.0, 2.0 * count / total)
+    mu = n * (n + 1) / 4
+    sigma = math.sqrt(n * (n + 1) * (2 * n + 1) / 24)
+    z = (w - mu) / sigma
+    return min(1.0, 2.0 * 0.5 * math.erfc(abs(z) / math.sqrt(2)))
+
+
+def tolerance(vals) -> float:
+    """Paper's tolerance: half the IQR of the sorted run accuracies."""
+    q1, q3 = np.percentile(vals, [25, 75])
+    return (q3 - q1) / 2
+
+
+def run_dataset(name: str, algos, runs: int = 30, epochs: int = 50, rho: int = 10):
+    X, y, k = load_dataset(name, seed=0)
+    out = {}
+    for algo in algos:
+        accs = []
+        for run in range(runs):
+            Xtr, ytr, Xte, yte = train_test_split(X, y, seed=run)
+            cfg = algo_config(algo, epochs=epochs, seed=run, rho=rho)
+            res = train_ps(Xtr, ytr, k, cfg, Xte, yte)
+            accs.append(res["test_accuracy"] * 100)
+        out[algo] = accs
+    return out
+
+
+def summarize(per_algo: dict, pairs) -> dict:
+    rows = {}
+    for algo, accs in per_algo.items():
+        rows[algo] = {
+            "best": float(np.max(accs)),
+            "avg": float(np.mean(accs)),
+            "tol": float(tolerance(accs)),
+        }
+    for a, b in pairs:
+        p = wilcoxon_signed_rank(per_algo[a], per_algo[b])
+        rows[b]["p_vs_" + a] = float(p)
+        rows[b]["significant_vs_" + a] = bool(p <= 0.05)
+    return rows
+
+
+def tables(which: str = "canonical", runs: int = 30, epochs: int = 50,
+           datasets=None, verbose=True) -> dict:
+    algos = CANONICAL if which == "canonical" else VARIANTS
+    pairs = ([("SGD", "gSGD"), ("SSGD", "gSSGD"), ("ASGD", "gASGD")] if which == "canonical"
+             else [("SSGD", "gSSGD"), ("SRMSprop", "gSRMSprop"), ("SAdagrad", "gSAdagrad")])
+    results = {}
+    for ds in datasets or DATASETS:
+        per_algo = run_dataset(ds, algos, runs=runs, epochs=epochs)
+        results[ds] = summarize(per_algo, pairs)
+        if verbose:
+            row = " ".join(f"{a}={results[ds][a]['avg']:5.1f}±{results[ds][a]['tol']:3.1f}"
+                           for a in algos)
+            print(f"  {ds:28s} {row}", flush=True)
+    return results
+
+
+def main(runs=30, epochs=50, out_path="results/paper_tables.json", datasets=None):
+    print("[paper_tables] canonical algorithms (Tables 2-3 analog)")
+    canonical = tables("canonical", runs, epochs, datasets)
+    print("[paper_tables] RMSprop/Adagrad variants (Tables 4-5 analog)")
+    variants = tables("variants", runs, epochs, datasets)
+    out = {"canonical": canonical, "variants": variants,
+           "protocol": {"runs": runs, "epochs": epochs, "lr": 0.2, "rho": 10}}
+    import os
+
+    os.makedirs("results", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=30)
+    ap.add_argument("--epochs", type=int, default=50)
+    ap.add_argument("--datasets", default="")
+    args = ap.parse_args()
+    main(args.runs, args.epochs,
+         datasets=args.datasets.split(",") if args.datasets else None)

@@ -1,0 +1,53 @@
+"""Figs. 12-13 of the paper: impact of the delay tolerance rho on accuracy.
+
+rho doubles as the worker count c (the paper sets c = rho), so this sweep is
+the accuracy-vs-parallelism trade the whole paper is about: higher rho = more
+parallel speedup (~rho-fold) but lower accuracy; the guided variant should
+degrade more slowly.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core.parameter_server import PSConfig, train_ps
+from repro.data import load_dataset, train_test_split
+
+RHOS = [1, 2, 4, 10, 17, 25, 36]
+
+
+def sweep(dataset: str, runs: int = 10, epochs: int = 50, guided_both=True):
+    X, y, k = load_dataset(dataset, seed=0)
+    out = {}
+    for rho in RHOS:
+        for guided in ([False, True] if guided_both else [False]):
+            accs = []
+            for run in range(runs):
+                Xtr, ytr, Xte, yte = train_test_split(X, y, seed=run)
+                mode = "seq" if rho == 1 else "ssgd"
+                # batch_size 4 so even the largest rho has enough mini-batches
+                # per round on the small datasets (c = rho workers)
+                cfg = PSConfig(mode=mode, guided=guided, rho=rho, epochs=epochs,
+                               seed=run, batch_size=4)
+                res = train_ps(Xtr, ytr, k, cfg, Xte, yte)
+                accs.append(res["test_accuracy"] * 100)
+            key = f"rho={rho}" + ("/guided" if guided else "")
+            out[key] = {"mean": float(np.mean(accs)), "std": float(np.std(accs))}
+            print(f"  {dataset:26s} {key:16s} acc={out[key]['mean']:5.1f}±{out[key]['std']:3.1f}",
+                  flush=True)
+    return out
+
+
+def main(runs=10, epochs=50, datasets=("liver_filtered", "pima")):
+    results = {ds: sweep(ds, runs, epochs) for ds in datasets}
+    import os
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/rho_sweep.json", "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Consolidate dry-run records into the §Roofline table.
+
+Reads results/dryrun/*.json (produced by repro.launch.dryrun) and emits the
+per-(arch x shape x mesh) roofline terms: compute/memory/collective seconds,
+dominant term, MODEL_FLOPS ratio, and per-device memory. Run the dry-runs
+first; this tool only aggregates."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(dirname="results/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs=None, mesh="pod16x16", rules="default", baseline_only=True):
+    recs = recs or load_records()
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("rules", "default") != rules:
+            continue
+        if baseline_only and (
+            r.get("moe_impl", "gather") != "gather"
+            or r.get("micro_override", 0)
+            or r.get("attn_impl", "xla") not in ("", "xla")
+        ):
+            continue
+        if r.get("skipped"):
+            rows.append({"arch": r["arch"], "shape": r["shape"], "skip": r["note"]})
+            continue
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"], "error": r.get("error", "?")[:80]})
+            continue
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "mem_gib": r["full_step"]["memory"]["peak_estimate_bytes"] / 2**30,
+            "compute_ms": t["compute_s"] * 1e3,
+            "memory_ms": t["memory_s"] * 1e3,
+            "collective_ms": t["collective_s"] * 1e3,
+            "dominant": t["dominant"].replace("_s", ""),
+            "useful_ratio": t["useful_ratio"],
+        })
+    return rows
+
+
+def print_table(rows):
+    hdr = f"{'arch':26s} {'shape':12s} {'mem GiB':>8s} {'comp ms':>9s} {'mem ms':>9s} {'coll ms':>9s} {'dom':>10s} {'useful':>7s}"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if "skip" in r:
+            print(f"{r['arch']:26s} {r['shape']:12s} SKIP: {r['skip'][:60]}")
+        elif "error" in r:
+            print(f"{r['arch']:26s} {r['shape']:12s} FAIL: {r['error']}")
+        else:
+            print(f"{r['arch']:26s} {r['shape']:12s} {r['mem_gib']:8.2f} {r['compute_ms']:9.2f} "
+                  f"{r['memory_ms']:9.2f} {r['collective_ms']:9.2f} {r['dominant']:>10s} "
+                  f"{r['useful_ratio']:7.2f}")
+
+
+def main():
+    recs = load_records()
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = table(recs, mesh=mesh)
+        if rows:
+            print(f"\n=== roofline: {mesh} (default rules) ===")
+            print_table(rows)
+    return table(recs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Benchmark harness: one entry per paper table/figure + framework benches.
+
+Prints `name,us_per_call,derived` CSV lines per the harness contract. The
+paper-accuracy benchmarks report their headline metric in `derived` (accuracy
+deltas) and the wall time of the benchmark itself in us_per_call.
+
+Quick mode (default) uses trimmed protocols so the whole suite finishes on one
+CPU core; `--full` runs the paper's exact protocol (30 runs x 50 epochs).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def bench_tables(full: bool):
+    from benchmarks.paper_tables import tables
+
+    runs, epochs = (30, 50) if full else (6, 25)
+    datasets = None if full else ["new_thyroid", "pima", "cancer"]
+    out, us = _timed(lambda: tables("canonical", runs, epochs, datasets, verbose=False))
+    # headline: mean (gSSGD - SSGD) accuracy delta across datasets (paper: +)
+    deltas = [v["gSSGD"]["avg"] - v["SSGD"]["avg"] for v in out.values()]
+    seq_gap = [v["SGD"]["avg"] - v["SSGD"]["avg"] for v in out.values()]
+    print(f"table2_3_canonical,{us:.0f},gSSGD-SSGD={np.mean(deltas):+.2f}pp;SGD-SSGD={np.mean(seq_gap):+.2f}pp")
+    return out
+
+
+def bench_variant_tables(full: bool):
+    from benchmarks.paper_tables import tables
+
+    runs, epochs = (30, 50) if full else (6, 25)
+    datasets = None if full else ["new_thyroid", "pima", "cancer"]
+    out, us = _timed(lambda: tables("variants", runs, epochs, datasets, verbose=False))
+    d_rms = [v["gSRMSprop"]["avg"] - v["SRMSprop"]["avg"] for v in out.values()]
+    d_ada = [v["gSAdagrad"]["avg"] - v["SAdagrad"]["avg"] for v in out.values()]
+    print(f"table4_5_variants,{us:.0f},gSRMSprop-SRMSprop={np.mean(d_rms):+.2f}pp;gSAdagrad-SAdagrad={np.mean(d_ada):+.2f}pp")
+    return out
+
+
+def bench_rho_sweep(full: bool):
+    from benchmarks.rho_sweep import sweep
+
+    runs, epochs = (10, 50) if full else (4, 25)
+    out, us = _timed(lambda: sweep("new_thyroid", runs, epochs))
+    lo = out["rho=1"]["mean"]
+    hi = out["rho=36"]["mean"]
+    print(f"fig12_13_rho_sweep,{us:.0f},acc(rho=1)={lo:.1f};acc(rho=36)={hi:.1f};drop={lo-hi:+.1f}pp")
+    return out
+
+
+def bench_progression(full: bool):
+    from benchmarks.progression import progression
+
+    runs, epochs = (5, 50) if full else (3, 25)
+    out, us = _timed(lambda: progression(runs=runs, epochs=epochs))
+    end_gap = out["SSGD"]["val_error"][-1] - out["SGD"]["val_error"][-1]
+    g_gain = out["SSGD"]["val_error"][-1] - out["gSSGD"]["val_error"][-1]
+    print(f"fig14_progression,{us:.0f},SSGD-SGD_end_err={end_gap:+.4f};guided_recovers={g_gain:+.4f}")
+    return out
+
+
+def bench_roofline():
+    from benchmarks.roofline import load_records, table
+
+    recs, us = _timed(load_records)
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = [r for r in table(recs, mesh=mesh) if "compute_ms" in r]
+        if not rows:
+            print(f"roofline_{mesh},0,no dry-run records (run repro.launch.dryrun)")
+            continue
+        dom = {}
+        for r in rows:
+            dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        useful = np.mean([r["useful_ratio"] for r in rows])
+        dom_s = ";".join(f"{k}:{v}" for k, v in sorted(dom.items()))
+        print(f"roofline_{mesh},{us:.0f},combos={len(rows)};dominant={dom_s};mean_useful={useful:.2f}")
+
+
+def bench_guided_at_scale(full: bool):
+    from benchmarks.guided_at_scale import run
+
+    out, us = _timed(lambda: run(steps=150 if full else 40, verbose=False))
+    gap = out["ASGD(sim)"]["final_loss"] - out["SSGD"]["final_loss"]
+    rec = out["ASGD(sim)"]["final_loss"] - out["gASGD(sim)"]["final_loss"]
+    dc = out["ASGD(sim)"]["final_loss"] - out["DC-ASGD"]["final_loss"]
+    print(f"beyond_guided_at_scale,{us:.0f},staleness_damage={gap:+.4f};guided_recovers={rec:+.4f};dcasgd_recovers={dc:+.4f}")
+    return out
+
+
+def bench_kernels():
+    from benchmarks.kernels_bench import bench_all
+
+    for name, us, derived in bench_all():
+        print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper protocol (30x50)")
+    ap.add_argument("--only", default="", help="comma list: tables,variants,rho,progression,roofline,kernels,scale")
+    args, _ = ap.parse_known_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    if want("tables"):
+        bench_tables(args.full)
+    if want("variants"):
+        bench_variant_tables(args.full)
+    if want("rho"):
+        bench_rho_sweep(args.full)
+    if want("progression"):
+        bench_progression(args.full)
+    if want("roofline"):
+        bench_roofline()
+    if want("scale"):
+        bench_guided_at_scale(args.full)
+    if want("kernels"):
+        bench_kernels()
+
+
+if __name__ == "__main__":
+    main()

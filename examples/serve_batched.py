@@ -1,0 +1,22 @@
+"""Serve a small model with a batch of requests: prefill + autoregressive
+decode against ring-buffer KV caches (or recurrent state for SSM archs).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--arch xlstm-350m]
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="xlstm-350m")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=64)
+ap.add_argument("--gen", type=int, default=16)
+args = ap.parse_args()
+
+serve_main([
+    "--arch", args.arch, "--reduced",
+    "--batch", str(args.batch),
+    "--prompt-len", str(args.prompt_len),
+    "--gen", str(args.gen),
+])

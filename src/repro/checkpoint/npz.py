@@ -1,0 +1,71 @@
+"""Sharding-aware npz checkpointing (orbax is not on the image).
+
+Pytrees are flattened with jax.tree_util key paths as archive keys; restore
+rebuilds the tree and (optionally) re-places leaves onto a sharding tree via
+jax.device_put — so a checkpoint written on one mesh restores onto another
+(the standard resharding-restore pattern, at npz scale).
+
+Layout: <dir>/step_<N>.npz + <dir>/LATEST. Writes are atomic (tmp + rename).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        arr = leaf
+        # numpy has no bfloat16: store as float32, restore() re-casts from the
+        # target tree's dtype
+        if hasattr(arr, "dtype") and arr.dtype == jax.numpy.bfloat16:
+            arr = arr.astype(jax.numpy.float32)
+        out[key] = np.asarray(arr)
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    flat = _flatten(tree)
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"), os.path.join(ckpt_dir, "LATEST"))
+    return path
+
+
+def latest_step(ckpt_dir: str):
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def restore(ckpt_dir: str, step: int, tree_like, shardings=None):
+    """Restore into the structure of `tree_like`. If `shardings` (a matching
+    tree of jax.sharding.Sharding) is given, leaves are device_put onto it."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(x) for x in p)
+        arr = data[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree

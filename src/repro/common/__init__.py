@@ -1,0 +1,90 @@
+"""Common utilities: pytree helpers, dtype policy, deterministic RNG splitting."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def tree_size(tree: Pytree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Pytree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree: Pytree, dtype) -> Pytree:
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def tree_zeros_like(tree: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a: Pytree, s) -> Pytree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: Pytree, y: Pytree) -> Pytree:
+    """alpha * x + y"""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_dot(a: Pytree, b: Pytree):
+    parts = jax.tree.map(lambda x, y: jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32)), a, b)
+    return jax.tree.reduce(jnp.add, parts)
+
+
+def tree_norm(a: Pytree):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def global_norm(tree: Pytree):
+    return tree_norm(tree)
+
+
+def split_like(key: jax.Array, tree: Pytree) -> Pytree:
+    """One rng key per leaf, structured like `tree`."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, list(keys))
+
+
+def count_params_str(n: int) -> str:
+    for unit, div in (("B", 1e9), ("M", 1e6), ("K", 1e3)):
+        if n >= div:
+            return f"{n / div:.2f}{unit}"
+    return str(n)
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    """Mixed-precision policy: params stored in `param_dtype`, compute in
+    `compute_dtype`, reductions/optimizer math in `accum_dtype`."""
+
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    accum_dtype: Any = jnp.float32
+
+    def cast_compute(self, tree: Pytree) -> Pytree:
+        return tree_cast(tree, self.compute_dtype)
+
+
+POLICY_F32 = DtypePolicy(jnp.float32, jnp.float32, jnp.float32)
+POLICY_BF16 = DtypePolicy(jnp.bfloat16, jnp.bfloat16, jnp.float32)
+POLICY_MIXED = DtypePolicy(jnp.float32, jnp.bfloat16, jnp.float32)

@@ -1,0 +1,36 @@
+"""Architecture registry. Each assigned architecture has its own module with the
+exact hyperparameters from the assignment (citations in brackets)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, MoEConfig, SSMConfig, XLSTMConfig  # noqa: F401
+
+ARCH_IDS = [
+    "llava_next_mistral_7b",
+    "granite_20b",
+    "minicpm_2b",
+    "grok_1_314b",
+    "xlstm_350m",
+    "jamba_1_5_large_398b",
+    "qwen3_moe_235b_a22b",
+    "hubert_xlarge",
+    "mistral_large_123b",
+    "yi_9b",
+    # the paper's own experimental model
+    "paper_logreg",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = _ALIASES.get(arch, arch).replace("-", "_")
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict:
+    return {a: get_config(a) for a in ARCH_IDS if a != "paper_logreg"}

@@ -1,0 +1,16 @@
+"""grok-1-314b [moe] — xAI Grok-1, 8 experts top-2. [hf:xai-org/grok-1]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    arch_type="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=32768,
+    vocab_size=131072,
+    moe=MoEConfig(n_experts=8, topk=2),
+    sliding_window=8192,
+    citation="hf:xai-org/grok-1",
+)

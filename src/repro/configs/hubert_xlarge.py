@@ -1,0 +1,19 @@
+"""hubert-xlarge [audio] — encoder-only transformer (wav2vec2 arch); conv/mel
+frontend stubbed as frame embeddings; masked-prediction over 504-unit codebook.
+[arXiv:2106.07447]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    arch_type="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    mlp_gated=False,
+    causal=False,            # encoder-only: bidirectional, no decode shapes
+    audio_frontend=True,
+    citation="arXiv:2106.07447",
+)

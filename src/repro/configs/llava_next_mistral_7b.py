@@ -1,0 +1,19 @@
+"""llava-next-mistral-7b [vlm] — LLaVA-NeXT with Mistral-7B backbone, anyres
+tiling. Backbone only; vision tower is a stub supplying patch embeddings.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    arch_type="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    n_patches=576,           # one anyres base tile of 24x24 patches (stubbed)
+    rope_theta=1e6,
+    sliding_window=8192,     # long_500k variant; mistral lineage supports SWA
+    citation="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)

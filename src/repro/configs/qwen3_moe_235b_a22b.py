@@ -1,0 +1,17 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts top-8, fine-grained experts
+(d_ff=1536 per expert). [hf:Qwen/Qwen3-30B-A3B]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    arch_type="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    d_ff=1536,
+    vocab_size=151936,
+    moe=MoEConfig(n_experts=128, topk=8),
+    sliding_window=8192,
+    citation="hf:Qwen/Qwen3-30B-A3B",
+)

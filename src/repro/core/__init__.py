@@ -1,0 +1,18 @@
+"""The paper's primary contribution: guided delay compensation for parallel SGD.
+
+Two implementations, one semantics:
+  - core.guided: the scalable TPU-SPMD form used by the distributed trainer
+    (consistency-weighted gradient combination, in-graph, O(c) extra state).
+  - core.parameter_server: the literal event-driven parameter-server simulation
+    (Figs. 3/4/7 of the paper) used for the faithful paper reproduction.
+"""
+from repro.core.consistency import consistency_increment  # noqa: F401
+from repro.core.guided import (  # noqa: F401
+    GuidedConfig,
+    GuidedState,
+    compensate_dc_asgd,
+    correction_weights,
+    guided_init,
+    refresh_stale,
+    update_scores,
+)

@@ -1,0 +1,27 @@
+"""Consistency statistics (paper Section 4).
+
+A worker's mini-batch is *consistent* at step t when its own loss delta moves in
+the same (descending) direction as the average training loss — i.e. its gradient
+"corresponds to the true gradient" despite the parallel-update delay. Workers
+whose deltas disagree with the average are the "long jump" victims of Fig. 1.
+
+The score accumulated over a delay-tolerance window rho is:
+    +1 + mag * relative-improvement    if both worker and average loss improved
+     0                                 otherwise
+so ranking prefers workers that improved, tie-broken by how much.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def consistency_increment(
+    worker_loss, prev_worker_loss, avg_loss, prev_avg_loss, magnitude_weight: float = 0.1
+):
+    """worker_loss: (c,) current per-worker mini-batch losses.
+    Returns (c,) score increments in [0, 1 + magnitude_weight]."""
+    d_worker = worker_loss - prev_worker_loss
+    d_avg = avg_loss - prev_avg_loss
+    both_improve = (d_worker < 0) & (d_avg < 0)
+    rel = jnp.clip(-d_worker / (jnp.abs(prev_worker_loss) + 1e-8), 0.0, 1.0)
+    return jnp.where(both_improve, 1.0 + magnitude_weight * rel, 0.0)

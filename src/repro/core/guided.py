@@ -1,0 +1,143 @@
+"""Scalable guided delay-compensated parallel SGD (gS/ASGD) for the TPU mesh.
+
+This is the paper's parameter-server algorithm (Fig. 7) re-derived for SPMD
+data-parallel training (see DESIGN.md §3 for the mapping):
+
+  * Each data shard of the mesh is one of the paper's `c` workers.
+  * Synchronous mode (SSGD): the gradient all-reduce plays the parameter server.
+  * Asynchronous mode (ASGD) is *simulated staleness*: gradients are evaluated
+    at `w_stale` — a parameter copy refreshed every `staleness` steps — exactly
+    the "gradient computed at W_{t-tau}, applied at W_t" variance structure the
+    paper compensates.
+  * DC-ASGD (Zheng et al. 2017) is the comparison baseline:
+        g~ = g + lambda * g ⊙ g ⊙ (W_t - w_stale).
+  * The guided correction: consistency scores (core.consistency) accumulate per
+    worker over a window of `rho` steps; at window end the <=4 most consistent
+    workers' gradients are re-applied. Because grad(sum_i w_i L_i) = sum_i w_i g_i,
+    the replay costs ONE weighted loss term — no stored gradients, no extra
+    collective ("fused" mode). "two_pass" mode performs the paper's literal
+    second sequential update via lax.cond + a second backward.
+
+All state is a pytree; everything runs inside one jitted train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.consistency import consistency_increment
+
+MODES = ("seq", "ssgd", "asgd", "dc_asgd")
+
+
+@dataclasses.dataclass(frozen=True)
+class GuidedConfig:
+    mode: str = "ssgd"            # seq | ssgd | asgd | dc_asgd
+    guided: bool = True           # the paper's g- prefix
+    rho: int = 10                 # delay tolerance / correction period (paper: 10)
+    max_consistent: int = 4       # paper: replay at most 4 mini-batches
+    staleness: int = 0            # asgd/dc_asgd: w_stale refresh period (0 -> rho)
+    dc_lambda: float = 0.04       # DC-ASGD Taylor coefficient
+    correction: str = "fused"     # fused | two_pass
+    correction_scale: float = 1.0
+    magnitude_weight: float = 0.1
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+
+    @property
+    def needs_stale(self) -> bool:
+        return self.mode in ("asgd", "dc_asgd")
+
+    @property
+    def stale_period(self) -> int:
+        return self.staleness or self.rho
+
+
+class GuidedState(NamedTuple):
+    step: jax.Array                 # ()
+    score: jax.Array                # (c,)
+    prev_worker_loss: jax.Array     # (c,)
+    prev_avg_loss: jax.Array        # ()
+    w_stale: Any                    # params copy or () when not needed
+    opt_state: Any                  # inner optimizer state
+
+
+def guided_init(gcfg: GuidedConfig, params, opt, n_workers: int) -> GuidedState:
+    return GuidedState(
+        step=jnp.zeros((), jnp.int32),
+        score=jnp.zeros((n_workers,), jnp.float32),
+        prev_worker_loss=jnp.full((n_workers,), jnp.inf, jnp.float32),
+        prev_avg_loss=jnp.asarray(jnp.inf, jnp.float32),
+        w_stale=jax.tree.map(jnp.copy, params) if gcfg.needs_stale else (),
+        opt_state=opt.init(params),
+    )
+
+
+def update_scores(state: GuidedState, gcfg: GuidedConfig, worker_loss, avg_loss):
+    """Accumulate this step's consistency increments (resets handled by caller
+    at window end)."""
+    inc = consistency_increment(
+        worker_loss, state.prev_worker_loss, avg_loss, state.prev_avg_loss, gcfg.magnitude_weight
+    )
+    # first step: prev losses are +inf -> deltas are -inf -> "both improve";
+    # suppress by masking non-finite prevs.
+    finite = jnp.isfinite(state.prev_worker_loss) & jnp.isfinite(state.prev_avg_loss)
+    return state.score + jnp.where(finite, inc, 0.0)
+
+
+def correction_weights(score, gcfg: GuidedConfig):
+    """(c,) normalized weights over the top-k most consistent workers.
+    All-zero scores -> zero weights (no correction), mirroring the paper's
+    'no consistent batches collected' case."""
+    k = min(gcfg.max_consistent, score.shape[0])
+    top_vals, top_idx = jax.lax.top_k(score, k)
+    w = jnp.zeros_like(score).at[top_idx].set(top_vals)
+    total = jnp.sum(w)
+    return jnp.where(total > 0, w / jnp.maximum(total, 1e-9), jnp.zeros_like(w))
+
+
+def is_window_end(step, gcfg: GuidedConfig):
+    return jnp.equal(jnp.mod(step + 1, gcfg.rho), 0)
+
+
+def compensate_dc_asgd(grads, params, w_stale, lam: float):
+    """DC-ASGD delay compensation: g + lam * g*g*(W - W_stale)."""
+
+    def one(g, p, pb):
+        g32 = g.astype(jnp.float32)
+        return (g32 + lam * g32 * g32 * (p.astype(jnp.float32) - pb.astype(jnp.float32))).astype(g.dtype)
+
+    return jax.tree.map(one, grads, params, w_stale)
+
+
+def refresh_stale(state: GuidedState, gcfg: GuidedConfig, params):
+    """Round-robin staleness model: w_stale := params every stale_period steps."""
+    if not gcfg.needs_stale:
+        return ()
+    refresh = jnp.equal(jnp.mod(state.step, gcfg.stale_period), 0)
+    return jax.tree.map(lambda ws, p: jnp.where(refresh, p, ws), state.w_stale, params)
+
+
+def advance(
+    state: GuidedState,
+    gcfg: GuidedConfig,
+    new_opt_state,
+    params,
+    worker_loss,
+    avg_loss,
+) -> GuidedState:
+    """Post-update bookkeeping: scores, window reset, stale refresh, step."""
+    score = update_scores(state, gcfg, worker_loss, avg_loss)
+    score = jnp.where(is_window_end(state.step, gcfg), jnp.zeros_like(score), score)
+    return GuidedState(
+        step=state.step + 1,
+        score=score,
+        prev_worker_loss=worker_loss,
+        prev_avg_loss=avg_loss,
+        w_stale=refresh_stale(state, gcfg, params),
+        opt_state=new_opt_state,
+    )

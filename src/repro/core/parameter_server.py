@@ -1,0 +1,258 @@
+"""Literal event-driven parameter-server simulation of the paper's algorithms.
+
+Reproduces Figs. 2-7 and 11 faithfully at the paper's scale (logistic
+regression on tabular data):
+
+  * SGD   — Fig. 2: sequential mini-batch gradient descent.
+  * SSGD  — Fig. 3/4: c workers compute gradients at the same W_t (barrier);
+            the server applies the c arrivals one at a time, so arrivals 2..c
+            are applied to weights that have already moved — the paper's delay.
+  * ASGD  — lock-free: an event queue with random per-worker compute delays;
+            each gradient is computed at the W the worker fetched and applied
+            whenever it arrives (true heterogeneous staleness).
+  * g-    — Fig. 7: the server tracks per-batch consistency (losses of the two
+            previously applied batches vs. the verification-set average loss),
+            and every rho arrivals replays the stored gradients of the <=4 most
+            consistent batches: W -= eta * v(psi_i).
+  * SRMSprop / SAdagrad — Fig. 11: the server-side update rule is swapped; the
+            guided replay stays plain (exactly as printed in the paper).
+
+Pure numpy; deterministic given a seed. This module is what benchmarks/
+paper_tables.py drives to produce Tables 2-5 and Figs. 12-14.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Optional
+
+import numpy as np
+
+
+# ----------------------------------------------------------- logistic model
+
+
+class LogisticRegression:
+    """Multinomial logistic regression with bias, matching the paper's Section 5
+    proof-of-concept model."""
+
+    def __init__(self, n_features: int, n_classes: int, rng: np.random.Generator):
+        self.W = 0.01 * rng.standard_normal((n_features + 1, n_classes))
+
+    @staticmethod
+    def _aug(X):
+        return np.concatenate([X, np.ones((X.shape[0], 1))], axis=1)
+
+    def logits(self, X, W=None):
+        W = self.W if W is None else W
+        return self._aug(X) @ W
+
+    def loss(self, X, y, W=None):
+        z = self.logits(X, W)
+        z = z - z.max(axis=1, keepdims=True)
+        lse = np.log(np.exp(z).sum(axis=1))
+        return float(np.mean(lse - z[np.arange(len(y)), y]))
+
+    def grad(self, X, y, W=None):
+        W = self.W if W is None else W
+        z = self.logits(X, W)
+        z = z - z.max(axis=1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(axis=1, keepdims=True)
+        p[np.arange(len(y)), y] -= 1.0
+        return self._aug(X).T @ p / len(y)
+
+    def accuracy(self, X, y) -> float:
+        return float(np.mean(self.logits(X).argmax(axis=1) == y))
+
+
+# ------------------------------------------------------------------- config
+
+
+@dataclasses.dataclass
+class PSConfig:
+    mode: str = "ssgd"            # seq | ssgd | asgd
+    guided: bool = False
+    optimizer: str = "sgd"        # sgd | rmsprop | adagrad (server-side rule)
+    lr: float = 0.2               # paper Table 1
+    epochs: int = 50              # paper Table 1
+    rho: int = 10                 # paper Table 1 (delay tolerance = #workers)
+    batch_size: int = 16
+    max_consistent: int = 4       # paper Section 4
+    verification_frac: float = 0.2  # paper Table 1 (training:validation 80:20)
+    rmsprop_beta: float = 0.9     # paper Fig. 11
+    eps: float = 1e-8
+    seed: int = 0
+
+    @property
+    def n_workers(self) -> int:
+        return 1 if self.mode == "seq" else self.rho  # paper: c = rho
+
+
+# ------------------------------------------------------------------- server
+
+
+class _Server:
+    """Parameter server: applies gradients with the configured rule and runs
+    the guided consistency tracking + replay (Fig. 7 / Fig. 11)."""
+
+    def __init__(self, model: LogisticRegression, cfg: PSConfig, Xv, yv, rng):
+        self.model = model
+        self.cfg = cfg
+        self.Xv, self.yv = Xv, yv
+        self.rng = rng
+        self.r = np.zeros_like(model.W)  # rmsprop/adagrad accumulator
+        self.t = 0
+        self.prev_avg_err = np.inf
+        self.recent: list = []        # deque of (batch_id, grad, loss_at_apply, X, y)
+        self.psi: dict = {}           # batch_id -> (score, grad)
+        self.history: list = []       # (t, avg_err) for progression plots
+
+    def _apply(self, grad):
+        cfg = self.cfg
+        if cfg.optimizer == "sgd":
+            self.model.W -= cfg.lr * grad
+        elif cfg.optimizer == "rmsprop":
+            self.r = cfg.rmsprop_beta * self.r + (1 - cfg.rmsprop_beta) * grad**2
+            self.model.W -= cfg.lr * grad / np.sqrt(self.r + cfg.eps)
+        elif cfg.optimizer == "adagrad":
+            self.r = self.r + grad**2
+            self.model.W -= cfg.lr * grad / np.sqrt(self.r + cfg.eps)
+        else:
+            raise ValueError(cfg.optimizer)
+
+    def receive(self, grad, batch_id, Xb, yb):
+        """One arrival at the parameter server (Fig. 4 body / Fig. 7 body)."""
+        cfg = self.cfg
+        loss_before = self.model.loss(Xb, yb)
+        self._apply(grad)
+        self.t += 1
+
+        avg_err = self.model.loss(self.Xv, self.yv)  # approximateAvgError()
+        self.history.append((self.t, avg_err))
+        if not cfg.guided:
+            self.prev_avg_err = avg_err
+            return
+
+        # collectConsistentBatches(d_i, d_{i-1}, d_{i-2}): a batch is consistent
+        # when the step that applied its gradient moved BOTH its own loss and
+        # the verification-average loss downward (the gradient "corresponds to
+        # the true gradient" despite the delay, Fig. 1). Ranking uses the
+        # average-error drop — getMostConsistentBatches(psi, E_t) keys on E_t.
+        if np.isfinite(self.prev_avg_err):
+            d_avg = avg_err - self.prev_avg_err
+            d_own = self.model.loss(Xb, yb) - loss_before
+            if d_own < 0 and d_avg < 0:
+                score = -d_avg / (abs(self.prev_avg_err) + 1e-12)
+                prev = self.psi.get(batch_id)
+                if prev is None or score > prev[0]:
+                    self.psi[batch_id] = (score, grad)
+        self.recent.append((batch_id, grad, loss_before, Xb, yb))
+        self.recent = self.recent[-3:]
+        self.prev_avg_err = avg_err
+
+        # max delay tolerance reached: replay the most consistent batches
+        if self.t % cfg.rho == 0:
+            best = sorted(self.psi.items(), key=lambda kv: -kv[1][0])[: cfg.max_consistent]
+            for _, (_, g_stored) in best:       # getMostConsistentBatches
+                self.model.W -= cfg.lr * g_stored  # plain replay (Fig. 7 line 8)
+            self.psi.clear()
+
+
+# --------------------------------------------------------------- main loops
+
+
+def _minibatches(X, y, bs, rng):
+    idx = rng.permutation(len(X))
+    for s in range(0, len(X) - bs + 1, bs):
+        sel = idx[s : s + bs]
+        yield sel, X[sel], y[sel]
+
+
+def train_ps(X, y, n_classes: int, cfg: PSConfig, Xtest=None, ytest=None):
+    """Run one full training per the paper's protocol. Returns dict of results."""
+    rng = np.random.default_rng(cfg.seed)
+    n_val = max(8, int(cfg.verification_frac * len(X)))
+    vidx = rng.choice(len(X), n_val, replace=False)
+    mask = np.ones(len(X), bool)
+    mask[vidx] = False
+    Xtr, ytr = X[mask], y[mask]
+    Xv, yv = X[vidx], y[vidx]
+
+    model = LogisticRegression(X.shape[1], n_classes, rng)
+    server = _Server(model, cfg, Xv, yv, rng)
+    c = cfg.n_workers
+
+    for _epoch in range(cfg.epochs):
+        batches = list(_minibatches(Xtr, ytr, cfg.batch_size, rng))
+        if cfg.mode == "seq":
+            for bid, (sel, Xb, yb) in enumerate(batches):
+                g = model.grad(Xb, yb)
+                server.receive(g, (_epoch, bid), Xb, yb)
+
+        elif cfg.mode == "ssgd":
+            # barrier rounds: c gradients at the same W, applied sequentially
+            # (the final round may be partial when the dataset is small)
+            for r0 in range(0, len(batches), c):
+                W_snapshot = model.W.copy()
+                grads = [
+                    (bid, model.grad(Xb, yb, W_snapshot), Xb, yb)
+                    for bid, (sel, Xb, yb) in enumerate(batches[r0 : r0 + c], start=r0)
+                ]
+                for bid, g, Xb, yb in grads:
+                    server.receive(g, (_epoch, bid), Xb, yb)
+
+        elif cfg.mode == "asgd":
+            # event-driven lock-free simulation with random compute delays
+            heap: list = []
+            it = iter(enumerate(batches))
+            now = 0.0
+            for w in range(c):
+                try:
+                    bid, (sel, Xb, yb) = next(it)
+                except StopIteration:
+                    break
+                delay = rng.exponential(1.0) + 0.1
+                heapq.heappush(heap, (now + delay, w, bid, model.W.copy(), Xb, yb))
+            while heap:
+                t_arr, w, bid, W_fetch, Xb, yb = heapq.heappop(heap)
+                g = model.grad(Xb, yb, W_fetch)   # gradient at *stale* weights
+                server.receive(g, (_epoch, bid), Xb, yb)
+                try:
+                    nbid, (sel, nXb, nyb) = next(it)
+                except StopIteration:
+                    continue
+                delay = rng.exponential(1.0) + 0.1
+                heapq.heappush(heap, (t_arr + delay, w, nbid, model.W.copy(), nXb, nyb))
+        else:
+            raise ValueError(cfg.mode)
+
+    out = {
+        "train_loss": model.loss(Xtr, ytr),
+        "val_loss": model.loss(Xv, yv),
+        "history": server.history,
+        "model": model,
+    }
+    if Xtest is not None:
+        out["test_accuracy"] = model.accuracy(Xtest, ytest)
+    return out
+
+
+ALGO_NAMES = {
+    ("seq", False, "sgd"): "SGD",
+    ("seq", True, "sgd"): "gSGD",
+    ("ssgd", False, "sgd"): "SSGD",
+    ("ssgd", True, "sgd"): "gSSGD",
+    ("asgd", False, "sgd"): "ASGD",
+    ("asgd", True, "sgd"): "gASGD",
+    ("ssgd", False, "rmsprop"): "SRMSprop",
+    ("ssgd", True, "rmsprop"): "gSRMSprop",
+    ("ssgd", False, "adagrad"): "SAdagrad",
+    ("ssgd", True, "adagrad"): "gSAdagrad",
+}
+
+
+def algo_config(name: str, **kw) -> PSConfig:
+    inv = {v: k for k, v in ALGO_NAMES.items()}
+    mode, guided, opt = inv[name]
+    return PSConfig(mode=mode, guided=guided, optimizer=opt, **kw)

@@ -1,0 +1,2 @@
+from repro.data.uci_analogs import DATASETS, iqr_filter, load_dataset, train_test_split  # noqa: F401
+from repro.data.tokens import synthetic_lm_batches, make_batch_for  # noqa: F401

@@ -1,0 +1,104 @@
+"""Blocked online-softmax attention (FlashAttention) for TPU via Pallas.
+
+Grid: (B, H, n_q_blocks, n_kv_blocks) with the kv dim sequential ("arbitrary")
+so the (acc, m, l) output blocks for a given (b, h, iq) are revisited across kv
+iterations — the classic TPU accumulator-in-revisited-output pattern (no
+scratch, works identically under interpret=True on CPU).
+
+Block shapes are MXU-aligned (multiples of 128 on the q/kv dims by default;
+d_head is kept whole per block since all assigned archs have d_head <= 256).
+GQA is handled by the kv index_map (h -> h // group_size). Causal and
+sliding-window masks are applied in-kernel; fully-masked kv blocks are still
+visited (correctness-first; the §Perf pass may skip them via a predicated
+index map).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *, scale, causal, window, bq, bk):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, dh)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bk, dh)
+
+    s = (q @ k.T) * scale  # (bq, bk)
+
+    rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= rows >= cols
+    if window:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0, 0]          # (bq,)
+    l_prev = l_ref[0, 0]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    # fully-masked rows: p would be exp(NEG_INF - NEG_INF) = 1; zero them
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.where(m_prev > NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_ref[0, 0, :, :] = alpha[:, None] * acc_ref[0, 0] + p @ v
+    m_ref[0, 0, :] = m_new
+    l_ref[0, 0, :] = l_new
+
+
+def flash_attention_raw(q, k, v, *, causal: bool, window: int, bq: int = 128, bk: int = 128,
+                        interpret: bool = True):
+    """q: (B,S,H,dh); k,v: (B,S,K,dh). Returns (acc, m, l) un-normalized."""
+    B, S, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+    nq, nk = S // bq, S // bk
+    scale = 1.0 / np.sqrt(dh)
+
+    # layout (B, H, S, dh) for blocking
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+
+    kernel = functools.partial(_attn_kernel, scale=scale, causal=causal, window=window, bq=bq, bk=bk)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return acc, m, l

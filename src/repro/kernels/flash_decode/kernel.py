@@ -1,0 +1,86 @@
+"""Flash-decode: one-token attention against a (ring-buffer) KV cache.
+
+Grid: (B, H, n_kv_blocks) with the kv dim sequential; (num, den, m) output
+blocks for a given (b, h) are revisited across kv iterations. The validity
+mask handles both partially-filled caches (slot < cache_len) and ring-buffer
+caches (all slots valid once cache_len >= S_c). This kernel is the per-shard
+body of the sequence-sharded distributed decode (models.transformer.
+sharded_decode_attention) on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, num_ref, den_ref, m_ref, *, scale, bk):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        num_ref[...] = jnp.zeros_like(num_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    q = q_ref[0, 0].astype(jnp.float32)       # (dh,)
+    k = k_ref[0, 0].astype(jnp.float32)       # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)       # (bk, dh)
+    valid_len = len_ref[0]                     # scalar int32 for this batch row
+
+    s = k @ q * scale                          # (bk,)
+    slots = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)[:, 0]
+    s = jnp.where(slots < valid_len, s, NEG_INF)
+
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.where(slots < valid_len, jnp.exp(s - m_new), 0.0)  # (bk,)
+    alpha = jnp.where(m_prev > NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0)
+    num_ref[0, 0, :] = alpha * num_ref[0, 0] + p @ v
+    den_ref[0, 0] = alpha * den_ref[0, 0] + jnp.sum(p)
+    m_ref[0, 0] = m_new
+
+
+def flash_decode_raw(q, k_cache, v_cache, cache_len, *, bk: int = 256, interpret: bool = True):
+    """q: (B,1,H,dh); caches: (B,S,K,dh); cache_len: (B,) int32.
+    Returns (num (B,H,dh), den (B,H)) un-normalized."""
+    B, _, H, dh = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    bk = min(bk, S)
+    assert S % bk == 0
+    nk = S // bk
+    scale = 1.0 / np.sqrt(dh)
+
+    qt = q[:, 0]                                   # (B,H,dh)
+    kt = jnp.transpose(k_cache, (0, 2, 1, 3))      # (B,K,S,dh)
+    vt = jnp.transpose(v_cache, (0, 2, 1, 3))
+
+    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk)
+    num, den, m = pl.pallas_call(
+        kernel,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, dh), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, h)),
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, cache_len.astype(jnp.int32))
+    return num, den

@@ -1,0 +1,24 @@
+"""jit'd public wrapper for the flash decode kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import flash_decode_raw
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("bk",))
+def flash_decode(q, k_cache, v_cache, cache_len, *, bk: int = 256):
+    """q: (B,1,H,dh); caches: (B,S,K,dh); cache_len (B,) -> (B,1,H,dh)."""
+    S = k_cache.shape[1]
+    cache_len = jnp.minimum(cache_len, S)  # ring-buffer: full cache once wrapped
+    num, den = flash_decode_raw(q, k_cache, v_cache, cache_len, bk=min(bk, S),
+                                interpret=_use_interpret())
+    out = num / jnp.maximum(den, 1e-30)[..., None]
+    return out[:, None].astype(q.dtype)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash_decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def decode_ref(q, k_cache, v_cache, cache_len):
+    """q: (B,1,H,dh); caches: (B,S,K,dh); cache_len: (B,) -> (B,1,H,dh)."""
+    B, _, H, dh = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q[:, 0].reshape(B, K, G, dh).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32)) / np.sqrt(dh)
+    valid = jnp.arange(S)[None] < jnp.minimum(cache_len, S)[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, dh)

@@ -1,0 +1,123 @@
+"""Fused guided / delay-compensated weight update.
+
+The paper's parameter-server hot loop at scale is a pure elementwise chain over
+the full parameter state:
+
+    g~ = g + lam * g*g*(W - W_stale)        (DC-ASGD compensation)
+    W' = W - lr_eff * g~                     (server update, lr_eff = eta*c)
+
+Unfused, XLA materializes g*g, (W - W_stale) and g~ in HBM: 6+ full-parameter
+HBM round trips per step. This kernel does it in ONE read of (W, g, W_stale)
+and one write of W' — strictly memory-bound, so fusing is a ~2x traffic win on
+the update phase (see EXPERIMENTS.md §Perf). The rmsprop variant additionally
+carries the r accumulator in the same pass (paper Fig. 11).
+
+Tiling: flat 1-D blocks of 64k elements (512 KiB fp32) per grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sgd_kernel(w_ref, g_ref, ws_ref, scal_ref, out_ref):
+    lr = scal_ref[0]
+    lam = scal_ref[1]
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    ws = ws_ref[...].astype(jnp.float32)
+    gt = g + lam * g * g * (w - ws)
+    out_ref[...] = (w - lr * gt).astype(out_ref.dtype)
+
+
+def _rmsprop_kernel(w_ref, g_ref, ws_ref, r_ref, scal_ref, out_ref, r_out_ref):
+    lr = scal_ref[0]
+    lam = scal_ref[1]
+    beta = scal_ref[2]
+    eps = scal_ref[3]
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    ws = ws_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    gt = g + lam * g * g * (w - ws)
+    r_new = beta * r + (1.0 - beta) * gt * gt
+    out_ref[...] = (w - lr * gt / jnp.sqrt(r_new + eps)).astype(out_ref.dtype)
+    r_out_ref[...] = r_new
+
+
+def _flat_call(kernel, n_out, arrs, scalars, block: int, out_dtypes):
+    n = arrs[0].size
+    block = min(block, n)
+    pad = (-n) % block
+    flat = [jnp.pad(a.reshape(-1), (0, pad)) for a in arrs]
+    m = n + pad
+    grid = (m // block,)
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)) for _ in flat]
+        + [pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)) for _ in range(n_out)],
+        out_shape=[jax.ShapeDtypeStruct((m,), dt) for dt in out_dtypes],
+        interpret=True,
+    )(*flat, scalars)
+    return [o[:n] for o in outs]
+
+
+def guided_sgd_update_raw(w, g, w_stale, lr, lam, *, block: int = 65536, interpret: bool = True):
+    """Flat fused update for one parameter leaf. Returns new w."""
+    scalars = jnp.stack([jnp.asarray(lr, jnp.float32), jnp.asarray(lam, jnp.float32)])
+    n = w.size
+    block = min(block, n)
+    pad = (-n) % block
+    wf = jnp.pad(w.reshape(-1), (0, pad))
+    gf = jnp.pad(g.reshape(-1), (0, pad))
+    wsf = jnp.pad(w_stale.reshape(-1), (0, pad))
+    m = n + pad
+    (out,) = pl.pallas_call(
+        _sgd_kernel,
+        grid=(m // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((m,), w.dtype)],
+        interpret=interpret,
+    )(wf, gf, wsf, scalars)
+    return out[:n].reshape(w.shape)
+
+
+def guided_rmsprop_update_raw(w, g, w_stale, r, lr, lam, beta, eps, *, block: int = 65536,
+                              interpret: bool = True):
+    scalars = jnp.stack([
+        jnp.asarray(lr, jnp.float32), jnp.asarray(lam, jnp.float32),
+        jnp.asarray(beta, jnp.float32), jnp.asarray(eps, jnp.float32),
+    ])
+    n = w.size
+    block = min(block, n)
+    pad = (-n) % block
+    pad_ = lambda a: jnp.pad(a.reshape(-1), (0, pad))
+    m = n + pad
+    out, r_new = pl.pallas_call(
+        _rmsprop_kernel,
+        grid=(m // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((block,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((m,), w.dtype),
+                   jax.ShapeDtypeStruct((m,), jnp.float32)],
+        interpret=interpret,
+    )(pad_(w), pad_(g), pad_(w_stale), pad_(r), scalars)
+    return out[:n].reshape(w.shape), r_new[:n].reshape(w.shape)

@@ -1,0 +1,39 @@
+"""jit'd tree-level wrapper for the fused guided update kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.guided_update.kernel import (
+    guided_rmsprop_update_raw,
+    guided_sgd_update_raw,
+)
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block",))
+def guided_sgd_update(params, grads, w_stale, lr, lam=0.0, *, block: int = 65536):
+    """Tree-level fused update: one kernel launch per leaf."""
+    return jax.tree.map(
+        lambda w, g, ws: guided_sgd_update_raw(w, g, ws, lr, lam, block=block,
+                                               interpret=_use_interpret()),
+        params, grads, w_stale,
+    )
+
+
+@partial(jax.jit, static_argnames=("block",))
+def guided_rmsprop_update(params, grads, w_stale, r, lr, lam=0.0, beta=0.9,
+                          eps=1e-8, *, block: int = 65536):
+    out = jax.tree.map(
+        lambda w, g, ws, ri: guided_rmsprop_update_raw(
+            w, g, ws, ri, lr, lam, beta, eps, block=block, interpret=_use_interpret()),
+        params, grads, w_stale, r,
+    )
+    new_w = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_w, new_r

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused guided update."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def guided_sgd_update_ref(w, g, w_stale, lr, lam):
+    w32, g32, ws32 = (a.astype(jnp.float32) for a in (w, g, w_stale))
+    gt = g32 + lam * g32 * g32 * (w32 - ws32)
+    return (w32 - lr * gt).astype(w.dtype)
+
+
+def guided_rmsprop_update_ref(w, g, w_stale, r, lr, lam, beta, eps):
+    w32, g32, ws32, r32 = (a.astype(jnp.float32) for a in (w, g, w_stale, r))
+    gt = g32 + lam * g32 * g32 * (w32 - ws32)
+    r_new = beta * r32 + (1 - beta) * gt * gt
+    return (w32 - lr * gt / jnp.sqrt(r_new + eps)).astype(w.dtype), r_new

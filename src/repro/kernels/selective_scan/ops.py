@@ -1,0 +1,27 @@
+"""jit'd public wrapper for the chunked selective scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.selective_scan.kernel import selective_scan_raw
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "block_ed"))
+def selective_scan(x, dt, A, Bc, Cc, h0=None, *, chunk: int = 16, block_ed: int = 512):
+    """x, dt: (B,S,ed); A: (ed,n); Bc,Cc: (B,S,n) -> (y (B,S,ed) fp32, h (B,ed,n))."""
+    B, S, ed = x.shape
+    n = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((B, ed, n), jnp.float32)
+    return selective_scan_raw(
+        x.astype(jnp.float32), dt.astype(jnp.float32), A.astype(jnp.float32),
+        Bc.astype(jnp.float32), Cc.astype(jnp.float32), h0.astype(jnp.float32),
+        Q=min(chunk, S), be=min(block_ed, ed), interpret=_use_interpret(),
+    )

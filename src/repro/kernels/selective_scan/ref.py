@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the selective scan (sequential recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, A, Bc, Cc, h0=None):
+    """x, dt: (B,S,ed); A: (ed,n); Bc, Cc: (B,S,n). fp32 math.
+    Returns (y (B,S,ed), h_final (B,ed,n))."""
+    B, S, ed = x.shape
+    n = A.shape[1]
+    h = h0 if h0 is not None else jnp.zeros((B, ed, n), jnp.float32)
+
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp
+        dA = jnp.exp(dt_t[:, :, None] * A)
+        h = dA * h + (dt_t * x_t)[:, :, None] * B_t[:, None, :]
+        y_t = jnp.sum(h * C_t[:, None, :], axis=-1)
+        return h, y_t
+
+    tm = lambda z: jnp.moveaxis(z.astype(jnp.float32), 1, 0)
+    h, ys = jax.lax.scan(step, h.astype(jnp.float32), (tm(dt), tm(Bc), tm(Cc), tm(x)))
+    return jnp.moveaxis(ys, 0, 1), h

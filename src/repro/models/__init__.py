@@ -1,0 +1,10 @@
+from repro.models.module import (  # noqa: F401
+    Param,
+    dense_param,
+    is_param,
+    logical_tree,
+    param_count,
+    split_params,
+    stacked,
+    value_tree,
+)

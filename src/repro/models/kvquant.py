@@ -1,0 +1,24 @@
+"""int8 KV-cache quantization (beyond-paper serving feature).
+
+Per-(token, kv-head) absmax quantization: k (B,S,K,dh) -> int8 values + one
+f32 scale per (B,S,K). Halves the decode-time cache footprint relative to
+bf16 (the dominant HBM tenant at decode_32k: B=128 x S=32k), at ~0.3% relative
+attention-output error (tests/test_kvquant.py). Dequantization fuses into the
+attention einsum's operand read under XLA.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_kv(x):
+    """x: (..., dh) float -> (int8 values (..., dh), f32 scales (...))."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q, scale, dtype):
+    """Inverse of quantize_kv."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)

@@ -1,0 +1,121 @@
+"""Mamba-1 selective SSM block (Gu & Dao 2023), as used by Jamba's mamba mixer.
+
+Training/prefill uses a time-major lax.scan with O(B * ed * n) live state —
+the only memory-feasible pure-XLA form at jamba scale (materializing per-position
+decay tensors is O(S * ed * n)). The TPU hot path is the chunked Pallas kernel in
+repro.kernels.selective_scan; the XLA scan here is the dry-run/CPU reference.
+
+The inner dim `ed = expand * d_model` is tensor-sharded over `model`; the SSM
+state dim `n` is small (16) and replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.module import Param
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.ssm.dt_rank or int(np.ceil(cfg.d_model / 16))
+
+
+def mamba_init(key, cfg) -> dict:
+    d = cfg.d_model
+    ed = cfg.ssm.expand * d
+    n = cfg.ssm.d_state
+    r = _dt_rank(cfg)
+    dc = cfg.ssm.d_conv
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (ed, 1))
+    return {
+        "in_proj": Param((jax.random.normal(ks[0], (d, 2 * ed)) / np.sqrt(d)).astype(dt), ("fsdp", "tp")),
+        "conv_w": Param((jax.random.normal(ks[1], (dc, ed)) / np.sqrt(dc)).astype(dt), (None, "tp")),
+        "conv_b": Param(jnp.zeros((ed,), dt), ("tp",)),
+        "x_proj": Param((jax.random.normal(ks[2], (ed, r + 2 * n)) / np.sqrt(ed)).astype(dt), ("tp", None)),
+        "dt_proj": Param((jax.random.normal(ks[3], (r, ed)) / np.sqrt(r)).astype(dt), (None, "tp")),
+        "dt_bias": Param(jnp.log(jnp.expm1(jnp.full((ed,), 0.01))).astype(jnp.float32), ("tp",)),
+        "A_log": Param(jnp.log(A), ("tp", None)),
+        "D": Param(jnp.ones((ed,), jnp.float32), ("tp",)),
+        "out_proj": Param((jax.random.normal(ks[4], (ed, d)) / np.sqrt(ed)).astype(dt), ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv over time. x: (B,S,ed), w: (dc,ed).
+    conv_state: (B, dc-1, ed) trailing inputs from the previous segment."""
+    dc = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+dc-1, ed)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(dc))
+    return out + b, xp[:, -(dc - 1) :]  # new conv_state
+
+
+def _ssm_inputs(p, x, cfg):
+    """Shared projection math. x: (B,S,d) -> (xconv, z, dt, Bc, Cc, new_conv_state)."""
+    n, r = cfg.ssm.d_state, _dt_rank(cfg)
+    xz = x @ p["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    return x1, z, n, r
+
+
+def mamba_apply(p, x, cfg, conv_state=None, ssm_state=None, impl: str = "xla"):
+    """Full-sequence form. x: (B,S,d). Returns (y, (conv_state, ssm_state))."""
+    B, S, d = x.shape
+    x1, z, n, r = _ssm_inputs(p, x, cfg)
+    xconv, new_conv = _causal_conv(x1, p["conv_w"], p["conv_b"], conv_state)
+    xconv = jax.nn.silu(xconv)
+
+    proj = xconv @ p["x_proj"]
+    dt_in, Bc, Cc = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"]).astype(jnp.float32)  # (B,S,ed)
+    A = -jnp.exp(p["A_log"])  # (ed, n)
+
+    if impl == "pallas":
+        from repro.kernels.selective_scan import ops as ss_ops
+
+        ys, new_state = ss_ops.selective_scan(
+            xconv.astype(jnp.float32), dt, A, Bc.astype(jnp.float32), Cc.astype(jnp.float32),
+            h0=ssm_state,
+        )
+    else:
+        h0 = ssm_state if ssm_state is not None else jnp.zeros((B, x1.shape[-1], n), jnp.float32)
+
+        def step(h, inp):
+            dt_t, B_t, C_t, x_t = inp  # (B,ed), (B,n), (B,n), (B,ed)
+            dA = jnp.exp(dt_t[:, :, None] * A)
+            h = dA * h + (dt_t * x_t)[:, :, None] * B_t[:, None, :].astype(jnp.float32)
+            y_t = jnp.sum(h * C_t[:, None, :].astype(jnp.float32), axis=-1)
+            return h, y_t
+
+        xs = (
+            jnp.moveaxis(dt, 1, 0),
+            jnp.moveaxis(Bc, 1, 0),
+            jnp.moveaxis(Cc, 1, 0),
+            jnp.moveaxis(xconv.astype(jnp.float32), 1, 0),
+        )
+        new_state, ys = jax.lax.scan(step, h0, xs)
+        ys = jnp.moveaxis(ys, 0, 1)  # (B,S,ed)
+
+    y = ys.astype(x.dtype) + xconv * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], (new_conv, new_state)
+
+
+def mamba_decode(p, x, cfg, conv_state, ssm_state):
+    """Single-token step. x: (B,1,d); states as returned by mamba_apply."""
+    y, (new_conv, new_ssm) = mamba_apply(p, x, cfg, conv_state, ssm_state, impl="xla")
+    return y, (new_conv, new_ssm)
+
+
+def mamba_state_init(cfg, batch: int, dtype=jnp.float32):
+    ed = cfg.ssm.expand * cfg.d_model
+    return (
+        jnp.zeros((batch, cfg.ssm.d_conv - 1, ed), dtype),
+        jnp.zeros((batch, ed, cfg.ssm.d_state), jnp.float32),
+    )

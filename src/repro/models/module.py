@@ -1,0 +1,81 @@
+"""Minimal module system: parameter pytrees with logical-axis annotations.
+
+flax/haiku are not on this image; this is deliberately a *function-first* module
+system in the MaxText tradition: each layer is (init_fn, apply_fn). `init` returns
+a pytree of `Param(value, logical)`; `split_params` unzips it into a value tree
+(fed to jit) and a logical-annotation tree (resolved to NamedShardings by
+repro.sharding.rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Param:
+    value: Any
+    logical: tuple  # logical axis name per dim, e.g. ("fsdp", "tp")
+
+
+# Registered as a pytree node (logical as static aux data) so boxed trees pass
+# through jax.eval_shape / jit tracing — the dry-run builds parameter structure
+# without ever materializing the (multi-hundred-GB) weights.
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.logical),
+    lambda logical, children: Param(children[0], logical),
+)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def value_tree(tree):
+    return jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+
+
+def logical_tree(tree):
+    return jax.tree.map(lambda p: p.logical, tree, is_leaf=is_param)
+
+
+def split_params(tree):
+    return value_tree(tree), logical_tree(tree)
+
+
+# ---------------------------------------------------------------- initializers
+
+
+def normal(key, shape, scale: float, dtype) -> jax.Array:
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def lecun(key, shape, fan_in: int, dtype) -> jax.Array:
+    return normal(key, shape, 1.0 / np.sqrt(max(fan_in, 1)), dtype)
+
+
+def dense_param(key, d_in: int, d_out, logical: tuple, dtype) -> Param:
+    shape = (d_in,) + ((d_out,) if isinstance(d_out, int) else tuple(d_out))
+    return Param(lecun(key, shape, d_in, dtype), logical)
+
+
+def stacked(n: int, init_fn: Callable[[jax.Array], Any], key: jax.Array):
+    """Initialize `n` copies of a sub-tree and stack leaves on a leading dim,
+    for lax.scan-over-layers. Logical annotations get a leading "layers"=None."""
+    keys = jax.random.split(key, n)
+    trees = [init_fn(k) for k in keys]
+
+    def stack(*ps):
+        return Param(jnp.stack([p.value for p in ps]), (None,) + tuple(ps[0].logical))
+
+    return jax.tree.map(stack, *trees, is_leaf=is_param)
+
+
+def param_count(tree) -> int:
+    vals = jax.tree.leaves(value_tree(tree))
+    return sum(int(np.prod(v.shape)) for v in vals)

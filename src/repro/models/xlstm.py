@@ -1,0 +1,211 @@
+"""xLSTM blocks (Beck et al. 2024, arXiv:2405.04517): mLSTM (matrix memory,
+parallelizable) and sLSTM (scalar memory, exponential gating, recurrent mixing).
+
+Both are implemented in their exact recurrent form with a time-major lax.scan
+(stabilized exponential gating in log space). The recurrent carry is
+O(B * nh * dh^2) for mLSTM and O(B * d) for sLSTM — small — so the scan is
+memory-safe at every assigned shape including long_500k decode (a single step).
+A chunkwise-parallel mLSTM is a §Perf/kernel-level optimization, validated
+against this reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.module import Param
+from repro.models.layers import rmsnorm, rmsnorm_init
+
+
+def _log_sigmoid(x):
+    return -jax.nn.softplus(-x)
+
+
+def _dense(key, di, do, logical, dt):
+    return Param((jax.random.normal(key, (di, do)) / np.sqrt(di)).astype(dt), logical)
+
+
+# ------------------------------------------------------------------ mLSTM
+
+
+def mlstm_init(key, cfg) -> dict:
+    d = cfg.d_model
+    di = int(cfg.xlstm.mlstm_proj_factor * d)
+    nh = cfg.n_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": rmsnorm_init(d),
+        "w_up": _dense(ks[0], d, di, ("fsdp", "tp"), dt),
+        "w_gate": _dense(ks[1], d, di, ("fsdp", "tp"), dt),
+        "conv_w": Param((jax.random.normal(ks[2], (4, di)) * 0.5).astype(dt), (None, "tp")),
+        "conv_b": Param(jnp.zeros((di,), dt), ("tp",)),
+        "wq": _dense(ks[3], di, di, ("tp", None), dt),
+        "wk": _dense(ks[4], di, di, ("tp", None), dt),
+        "wv": _dense(ks[5], di, di, ("tp", None), dt),
+        "w_if": _dense(ks[6], d, 2 * nh, ("fsdp", None), jnp.float32),
+        "b_if": Param(jnp.concatenate([jnp.zeros((nh,)), 3.0 * jnp.ones((nh,))]), (None,)),
+        "out_norm": rmsnorm_init(di),
+        "w_down": _dense(ks[7], di, d, ("tp", "fsdp"), dt),
+    }
+
+
+def _mlstm_scan(q, k, v, log_i, log_f, state):
+    """q,k,v: (B,S,nh,dh); log_i/log_f: (B,S,nh). state: (C,n,m) or None.
+    Returns h (B,S,nh,dh), new state. Exact stabilized recurrence."""
+    B, S, nh, dh = q.shape
+    scale = 1.0 / np.sqrt(dh)
+    if state is None:
+        C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, nh, dh), jnp.float32)
+        m0 = jnp.full((B, nh), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, li_t, lf_t = inp  # (B,nh,dh) x3, (B,nh) x2
+        m_new = jnp.maximum(lf_t + m, li_t)
+        i_p = jnp.exp(li_t - m_new)
+        f_p = jnp.exp(lf_t + m - m_new)
+        C = f_p[..., None, None] * C + i_p[..., None, None] * (
+            v_t[..., :, None] * k_t[..., None, :]
+        )  # (B,nh,dh_v,dh_k)
+        n = f_p[..., None] * n + i_p[..., None] * k_t
+        qs = q_t * scale
+        num = jnp.einsum("bhvk,bhk->bhv", C, qs)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qs)), jnp.exp(-m_new))
+        h_t = num / den[..., None]
+        return (C, n, m_new), h_t
+
+    tm = lambda x: jnp.moveaxis(x.astype(jnp.float32), 1, 0)
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), (tm(q), tm(k), tm(v), tm(log_i), tm(log_f)))
+    return jnp.moveaxis(hs, 0, 1), (C, n, m)
+
+
+def mlstm_apply(p, x, cfg, state=None):
+    """x: (B,S,d). state: (conv_state, (C,n,m)) or None. Returns (y, state)."""
+    from repro.models.mamba import _causal_conv
+
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    a = xn @ p["w_up"]
+    g = xn @ p["w_gate"]
+    conv_state = state[0] if state is not None else None
+    ac, new_conv = _causal_conv(a, p["conv_w"], p["conv_b"], conv_state)
+    ac = jax.nn.silu(ac)
+    di = a.shape[-1]
+    dh = di // nh
+    q = (ac @ p["wq"]).reshape(B, S, nh, dh)
+    k = ((ac @ p["wk"]) / np.sqrt(dh)).reshape(B, S, nh, dh)
+    v = (a @ p["wv"]).reshape(B, S, nh, dh)
+    gates = xn.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    log_i = gates[..., :nh]
+    log_f = _log_sigmoid(gates[..., nh:])
+    inner = state[1] if state is not None else None
+    h, new_inner = _mlstm_scan(q, k, v, log_i, log_f, inner)
+    h = h.reshape(B, S, di).astype(x.dtype)
+    h = rmsnorm(h, p["out_norm"], cfg.norm_eps)
+    y = (h * jax.nn.silu(g)) @ p["w_down"]
+    return x + y, (new_conv, new_inner)
+
+
+def mlstm_state_init(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    di = int(cfg.xlstm.mlstm_proj_factor * d)
+    nh = cfg.n_heads
+    dh = di // nh
+    return (
+        jnp.zeros((batch, 3, di), dtype),
+        (
+            jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            jnp.zeros((batch, nh, dh), jnp.float32),
+            jnp.full((batch, nh), -1e30, jnp.float32),
+        ),
+    )
+
+
+# ------------------------------------------------------------------ sLSTM
+
+
+def slstm_init(key, cfg) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    f = int(cfg.xlstm.slstm_proj_factor * d)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": rmsnorm_init(d),
+        "conv_w": Param((jax.random.normal(ks[0], (4, d)) * 0.5).astype(dt), (None, "tp")),
+        "conv_b": Param(jnp.zeros((d,), dt), ("tp",)),
+        "w_gates": _dense(ks[1], d, 4 * d, ("fsdp", "tp"), dt),  # i,f,z,o stacked
+        "r_gates": Param(
+            (jax.random.normal(ks[2], (4, nh, dh, dh)) / np.sqrt(dh)).astype(jnp.float32),
+            (None, None, None, None),
+        ),
+        "b_gates": Param(jnp.zeros((4, d), jnp.float32).at[1].set(3.0), (None, None)),
+        "out_norm": rmsnorm_init(d),
+        "w_ff": Param((jax.random.normal(ks[3], (d, 2, f)) / np.sqrt(d)).astype(dt), ("fsdp", None, "tp")),
+        "w_ff_out": _dense(ks[4], f, d, ("tp", "fsdp"), dt),
+    }
+
+
+def _slstm_scan(wx, r, state):
+    """wx: (B,S,4,nh,dh) input contributions; r: (4,nh,dh,dh).
+    state: (h,c,n,m) each (B,nh,dh). Exact stabilized sLSTM recurrence."""
+    B, S, _, nh, dh = wx.shape
+    if state is None:
+        z = jnp.zeros((B, nh, dh), jnp.float32)
+        state = (z, z, z + 1.0, z - 1e30)
+
+    def step(carry, wx_t):
+        h, c, n, m = carry
+        rec = jnp.einsum("ghkd,bhd->bghk", r, h)  # (B,4,nh,dh)
+        pre = wx_t + rec
+        li = pre[:, 0]
+        lf = _log_sigmoid(pre[:, 1])
+        z_t = jnp.tanh(pre[:, 2])
+        o_t = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(lf + m, li)
+        i_p = jnp.exp(li - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c = f_p * c + i_p * z_t
+        n = f_p * n + i_p
+        h = o_t * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    tm = jnp.moveaxis(wx.astype(jnp.float32), 1, 0)
+    new_state, hs = jax.lax.scan(step, state, tm)
+    return jnp.moveaxis(hs, 0, 1), new_state
+
+
+def slstm_apply(p, x, cfg, state=None):
+    """x: (B,S,d). state: (conv_state, (h,c,n,m)) or None."""
+    from repro.models.mamba import _causal_conv
+
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    conv_state = state[0] if state is not None else None
+    xc, new_conv = _causal_conv(xn, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    wx = (xc @ p["w_gates"]).astype(jnp.float32) + p["b_gates"].reshape(1, 1, 4 * d).astype(jnp.float32).reshape(1, 1, -1)
+    wx = wx.reshape(B, S, 4, nh, dh)
+    inner = state[1] if state is not None else None
+    h, new_inner = _slstm_scan(wx, p["r_gates"], inner)
+    h = h.reshape(B, S, d).astype(x.dtype)
+    h = rmsnorm(h, p["out_norm"], cfg.norm_eps)
+    hf = jnp.einsum("bsd,dtf->bstf", h, p["w_ff"])
+    y = (jax.nn.silu(hf[..., 0, :]) * hf[..., 1, :]) @ p["w_ff_out"]
+    return x + y, (new_conv, new_inner)
+
+
+def slstm_state_init(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    nh, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return (jnp.zeros((batch, 3, d), dtype), (z, z, z + 1.0, z - 1e30))

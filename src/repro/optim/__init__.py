@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adagrad,
+    adam,
+    get_optimizer,
+    momentum,
+    rmsprop,
+    sgd,
+)
+from repro.optim.schedules import constant, cosine, wsd  # noqa: F401

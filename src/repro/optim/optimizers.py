@@ -1,0 +1,115 @@
+"""Pure pytree optimizers (optax is not on the image).
+
+Each optimizer is an `Optimizer(init, update)` pair:
+  state = opt.init(params)
+  updates, state = opt.update(grads, state, params, lr)
+  params = tree_add(params, updates)          # updates already include -lr
+
+The RMSprop/Adagrad variants match the paper's Section 5 definitions exactly
+(Fig. 11): rmsprop uses r_t = beta*r_{t-1} + (1-beta)*v_t^2, eps inside sqrt.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (updates, state)
+    name: str = ""
+
+
+def _zeros(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        return jax.tree.map(lambda g: (-lr * g.astype(jnp.float32)).astype(g.dtype), grads), state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"m": _zeros(params)}
+
+    def update(grads, state, params, lr):
+        m = jax.tree.map(lambda mi, g: beta * mi + g.astype(jnp.float32), state["m"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda mi, g: -(lr * (beta * mi + g.astype(jnp.float32))), m, grads)
+        else:
+            upd = jax.tree.map(lambda mi: -lr * mi, m)
+        return upd, {"m": m}
+
+    return Optimizer(init, update, "momentum")
+
+
+def rmsprop(beta: float = 0.9, eps: float = 1e-8) -> Optimizer:
+    """Paper Fig. 11: r_t = beta r_{t-1} + (1-beta) v_t^2; W -= eta v/sqrt(r+eps)."""
+
+    def init(params):
+        return {"r": _zeros(params)}
+
+    def update(grads, state, params, lr):
+        r = jax.tree.map(
+            lambda ri, g: beta * ri + (1 - beta) * jnp.square(g.astype(jnp.float32)), state["r"], grads
+        )
+        upd = jax.tree.map(lambda g, ri: -lr * g.astype(jnp.float32) / jnp.sqrt(ri + eps), grads, r)
+        return upd, {"r": r}
+
+    return Optimizer(init, update, "rmsprop")
+
+
+def adagrad(eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return {"r": _zeros(params)}
+
+    def update(grads, state, params, lr):
+        r = jax.tree.map(lambda ri, g: ri + jnp.square(g.astype(jnp.float32)), state["r"], grads)
+        upd = jax.tree.map(lambda g, ri: -lr * g.astype(jnp.float32) / jnp.sqrt(ri + eps), grads, r)
+        return upd, {"r": r}
+
+    return Optimizer(init, update, "adagrad")
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": _zeros(params), "v": _zeros(params), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(mi, vi, p):
+            step = mi / bc1 / (jnp.sqrt(vi / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        return jax.tree.map(upd, m, v, params), {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update, "adam")
+
+
+_REGISTRY = {
+    "sgd": sgd,
+    "momentum": momentum,
+    "rmsprop": rmsprop,
+    "adagrad": adagrad,
+    "adam": adam,
+}
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return _REGISTRY[name](**kw)

@@ -1,0 +1,34 @@
+"""Learning-rate schedules. WSD (warmup-stable-decay) is the schedule MiniCPM
+(arXiv:2404.06395) trains with; included because minicpm-2b is an assigned arch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def wsd(lr: float, warmup: int, stable: int, decay: int, final_frac: float = 0.01):
+    """Warmup-Stable-Decay: linear warmup, flat plateau, exponential-ish decay."""
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        in_decay = step > (warmup + stable)
+        prog = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+        dec = lr * jnp.power(final_frac, prog)
+        return jnp.where(step < warmup, warm, jnp.where(in_decay, dec, lr))
+
+    return f

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    REPLICATED_RULES,
+    ShardCtx,
+    logical_to_spec,
+    shardings_for,
+)

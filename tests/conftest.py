@@ -1,0 +1,9 @@
+import os
+
+# Keep the default test process single-device (the dry-run sets its own flags
+# in a separate process; forcing 512 devices here would slow every test).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,26 @@
+"""Checkpoint save/restore roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore, save
+
+
+def test_roundtrip(tmp_path):
+    tree = {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                       "b": jnp.ones(3, jnp.bfloat16)},
+            "step": jnp.asarray(7)}
+    save(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    out = restore(str(tmp_path), 7, tree)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]), np.asarray(tree["params"]["w"]))
+    assert out["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_multiple_steps(tmp_path):
+    tree = {"w": jnp.zeros(4)}
+    save(str(tmp_path), 1, tree)
+    save(str(tmp_path), 5, {"w": jnp.full(4, 5.0)})
+    assert latest_step(str(tmp_path)) == 5
+    out = restore(str(tmp_path), 5, tree)
+    np.testing.assert_array_equal(np.asarray(out["w"]), 5.0)

@@ -1,0 +1,60 @@
+"""Convergence-analysis sanity checks (paper Section 3).
+
+The paper derives SSGD convergence O(1/(cT) + sigma^2): more workers speed up
+the *early* optimization per wall-clock round (c gradients applied per round)
+but converge to a sigma^2 noise floor. We verify both behaviours on a convex
+logistic-regression problem where they are measurable.
+"""
+import numpy as np
+import pytest
+
+from repro.core.parameter_server import LogisticRegression, PSConfig, train_ps
+from repro.data import load_dataset, train_test_split
+
+
+def _loss_after_rounds(c: int, n_rounds: int, lr=0.05, seed=0):
+    """Train SSGD with c workers for a fixed number of ROUNDS; return loss."""
+    X, y, k = load_dataset("cancer", seed=0)
+    Xtr, ytr, Xte, yte = train_test_split(X, y, seed=seed)
+    rng = np.random.default_rng(seed)
+    model = LogisticRegression(Xtr.shape[1], k, rng)
+    bs = 16
+    idx = rng.permutation(len(Xtr))
+    Xs, ys = Xtr[idx], ytr[idx]
+    batches = [(Xs[i : i + bs], ys[i : i + bs]) for i in range(0, len(Xs) - bs, bs)]
+    bi = 0
+    for _ in range(n_rounds):
+        W = model.W.copy()
+        grads = []
+        for _ in range(c):
+            Xb, yb = batches[bi % len(batches)]
+            bi += 1
+            grads.append(model.grad(Xb, yb, W))
+        for g in grads:
+            model.W -= lr * g
+    return model.loss(Xtr, ytr)
+
+
+def test_more_workers_faster_early_convergence():
+    """O(1/(cT)): after the same number of rounds, larger c => lower loss."""
+    l1 = _loss_after_rounds(c=1, n_rounds=10)
+    l4 = _loss_after_rounds(c=4, n_rounds=10)
+    assert l4 < l1, (l1, l4)
+
+
+def test_noise_floor_grows_with_lr():
+    """The eta*sigma^2 term of Eq. (3): after convergence, the stationary loss
+    scales with the step size — the small-lr long run ends below the large-lr
+    long run even though the large-lr run had every advantage early."""
+    hi = _loss_after_rounds(c=4, n_rounds=400, lr=0.5)
+    lo = _loss_after_rounds(c=4, n_rounds=400, lr=0.02)
+    assert np.isfinite(hi) and np.isfinite(lo)
+    assert lo < hi, (lo, hi)
+
+
+def test_seq_equals_ssgd_c1_trajectory():
+    X, y, k = load_dataset("cancer", seed=0)
+    Xtr, ytr, Xte, yte = train_test_split(X, y, seed=0)
+    a = train_ps(Xtr, ytr, k, PSConfig(mode="seq", epochs=1, seed=5, rho=1), Xte, yte)
+    b = train_ps(Xtr, ytr, k, PSConfig(mode="ssgd", epochs=1, seed=5, rho=1), Xte, yte)
+    np.testing.assert_allclose(a["model"].W, b["model"].W, atol=1e-12)

@@ -1,0 +1,79 @@
+"""Data pipeline tests: UCI analogs, IQR filter, token stream."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import DATASETS, iqr_filter, load_dataset, train_test_split
+from repro.data.tokens import synthetic_lm_batches, make_batch_for
+from repro.data.uci_analogs import SPECS
+
+
+@pytest.mark.parametrize("name", DATASETS)
+def test_dataset_shapes_and_balance(name):
+    X, y, k = load_dataset(name, seed=0)
+    base = name.removesuffix("_filtered")
+    spec = SPECS[base]
+    assert X.shape[1] == spec.d
+    assert k == spec.classes
+    assert set(np.unique(y)) <= set(range(k))
+    if not name.endswith("_filtered"):
+        assert len(X) == spec.n
+        # class balance within 12% of spec priors (flips move a few labels)
+        fr = np.bincount(y, minlength=k) / len(y)
+        np.testing.assert_allclose(fr, spec.priors, atol=0.12)
+
+
+def test_determinism():
+    X1, y1, _ = load_dataset("pima", seed=0)
+    X2, y2, _ = load_dataset("pima", seed=0)
+    np.testing.assert_array_equal(X1, X2)
+    np.testing.assert_array_equal(y1, y2)
+    X3, _, _ = load_dataset("pima", seed=1)
+    assert not np.array_equal(X1, X3)
+
+
+def test_iqr_filter_removes_only_outliers():
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((500, 4))
+    X[:10] += 100.0  # gross outliers
+    y = rng.integers(0, 2, 500)
+    Xf, yf = iqr_filter(X, y)
+    assert len(Xf) < len(X)
+    assert np.max(np.abs(Xf)) < 50.0
+    # filtered output is a subset of rows
+    assert len(Xf) == len(yf)
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_split_is_stratified_and_disjoint(seed):
+    X, y, k = load_dataset("new_thyroid", seed=0)
+    Xtr, ytr, Xte, yte = train_test_split(X, y, seed=seed)
+    assert len(Xtr) + len(Xte) == len(X)
+    # every class appears in the test fold
+    assert set(np.unique(yte)) == set(np.unique(y))
+
+
+def test_token_stream_is_learnable_markov():
+    it = synthetic_lm_batches(vocab=64, seq_len=32, global_batch=4, seed=0, n_corpora=2)
+    b = next(it)
+    assert b["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    # successor entropy is lower than uniform (structure exists)
+    toks = np.concatenate([next(it)["tokens"].ravel() for _ in range(5)])
+    assert len(np.unique(toks)) > 8
+
+
+def test_make_batch_for_every_family():
+    from repro.configs import all_configs
+
+    for name, cfg in all_configs().items():
+        r = cfg.reduced()
+        b = make_batch_for(r, 16, 2, seed=0)
+        if r.audio_frontend:
+            assert b["frames"].shape == (2, 16, r.d_model)
+        else:
+            assert b["tokens"].shape == (2, 16)
+            assert b["tokens"].max() < r.vocab_size
+        if r.arch_type == "vlm":
+            assert b["patches"].shape == (2, r.n_patches, r.d_model)

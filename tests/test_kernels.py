@@ -1,0 +1,137 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.guided_update.ops import guided_sgd_update, guided_rmsprop_update
+from repro.kernels.guided_update.ref import guided_rmsprop_update_ref, guided_sgd_update_ref
+from repro.kernels.selective_scan.ops import selective_scan
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+RNG = np.random.default_rng(0)
+
+
+def randn(*shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+# ------------------------------------------------------------ flash attention
+
+
+@pytest.mark.parametrize("B,S,H,K,dh", [(2, 256, 4, 2, 64), (1, 128, 8, 8, 32),
+                                        (1, 256, 4, 1, 128), (2, 512, 2, 2, 64)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 128)])
+def test_flash_attention_matches_ref(B, S, H, K, dh, causal, window):
+    q, k, v = randn(B, S, H, dh), randn(B, S, K, dh), randn(B, S, K, dh)
+    out = flash_attention(q, k, v, causal=causal, window=window, bq=128, bk=128)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q, k, v = (randn(1, 128, 2, 64, dtype=dtype) for _ in range(3))
+    out = flash_attention(q, k, v, causal=True)
+    assert out.dtype == dtype
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                               atol=2e-2 if dtype == jnp.bfloat16 else 3e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(64, 64), (128, 64), (64, 128)])
+def test_flash_attention_block_shapes(bq, bk):
+    q, k, v = randn(1, 256, 2, 32), randn(1, 256, 2, 32), randn(1, 256, 2, 32)
+    out = flash_attention(q, k, v, causal=True, bq=bq, bk=bk)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+# --------------------------------------------------------------- flash decode
+
+
+@pytest.mark.parametrize("B,S,H,K,dh,bk", [(2, 512, 4, 2, 64, 256), (3, 256, 8, 1, 128, 64),
+                                           (1, 1024, 2, 2, 32, 256)])
+def test_flash_decode_matches_ref(B, S, H, K, dh, bk):
+    q = randn(B, 1, H, dh)
+    kc, vc = randn(B, S, K, dh), randn(B, S, K, dh)
+    lens = jnp.asarray(RNG.integers(1, S + 1, (B,)), jnp.int32)
+    out = flash_decode(q, kc, vc, lens, bk=bk)
+    ref = decode_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_flash_decode_full_cache_equals_attention_row():
+    """Decode over a fully-valid cache == last row of causal attention."""
+    B, S, H, dh = 1, 256, 2, 64
+    k = randn(B, S, H, dh)
+    v = randn(B, S, H, dh)
+    q_full = randn(B, S, H, dh)
+    full = attention_ref(q_full, k, v, causal=True)
+    dec = flash_decode(q_full[:, -1:], k, v, jnp.asarray([S], jnp.int32))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]), atol=3e-5)
+
+
+# ------------------------------------------------------------- selective scan
+
+
+@pytest.mark.parametrize("B,S,ed,n,Q,be", [(2, 64, 128, 16, 16, 64), (1, 32, 64, 8, 8, 64),
+                                           (2, 128, 256, 16, 32, 128), (1, 64, 64, 4, 64, 32)])
+def test_selective_scan_matches_ref(B, S, ed, n, Q, be):
+    x = randn(B, S, ed)
+    dt = jnp.abs(randn(B, S, ed)) * 0.1
+    A = -jnp.abs(randn(ed, n))
+    Bc, Cc = randn(B, S, n), randn(B, S, n)
+    h0 = randn(B, ed, n)
+    y, h = selective_scan(x, dt, A, Bc, Cc, h0, chunk=Q, block_ed=be)
+    yr, hr = selective_scan_ref(x, dt, A, Bc, Cc, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-4)
+
+
+def test_selective_scan_state_chaining():
+    """Scanning two halves with carried state == one full scan."""
+    B, S, ed, n = 1, 64, 32, 8
+    x, dt = randn(B, S, ed), jnp.abs(randn(B, S, ed)) * 0.1
+    A = -jnp.abs(randn(ed, n))
+    Bc, Cc = randn(B, S, n), randn(B, S, n)
+    y_full, h_full = selective_scan(x, dt, A, Bc, Cc, chunk=16, block_ed=32)
+    y1, h1 = selective_scan(x[:, :32], dt[:, :32], A, Bc[:, :32], Cc[:, :32], chunk=16, block_ed=32)
+    y2, h2 = selective_scan(x[:, 32:], dt[:, 32:], A, Bc[:, 32:], Cc[:, 32:], h0=h1, chunk=16, block_ed=32)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full), atol=1e-4)
+
+
+# -------------------------------------------------------------- guided update
+
+
+@pytest.mark.parametrize("n,block", [(1000, 256), (65536, 65536), (37 * 129, 512)])
+def test_guided_sgd_update_matches_ref(n, block):
+    w = randn(n)
+    g = randn(n) * 0.01
+    ws = w + 0.05
+    out = guided_sgd_update(w, g, ws, 0.2, 0.04, block=block)
+    ref = guided_sgd_update_ref(w, g, ws, 0.2, 0.04)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+def test_guided_rmsprop_update_matches_ref():
+    tree = {"a": randn(513), "b": {"c": randn(17, 65)}}
+    g = jax.tree.map(lambda x: x * 0.01, tree)
+    ws = jax.tree.map(lambda x: x + 0.1, tree)
+    r = jax.tree.map(lambda x: jnp.abs(x) * 0.2, tree)
+    nw, nr = guided_rmsprop_update(tree, g, ws, r, 0.2, 0.04, block=256)
+    for k in ("a",):
+        rw, rr = guided_rmsprop_update_ref(tree[k], g[k], ws[k], r[k], 0.2, 0.04, 0.9, 1e-8)
+        np.testing.assert_allclose(np.asarray(nw[k]), np.asarray(rw), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(nr[k]), np.asarray(rr), atol=1e-6)
+
+
+def test_guided_update_lam_zero_is_sgd():
+    w, g, ws = randn(333), randn(333), randn(333)
+    out = guided_sgd_update(w, g, ws, 0.1, 0.0, block=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(w - 0.1 * g), atol=1e-6)

@@ -1,0 +1,55 @@
+"""int8 KV-cache quantization: roundtrip error and end-to-end decode parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import make_batch_for
+from repro.models import transformer as T
+from repro.models.kvquant import dequantize_kv, quantize_kv
+from repro.models.module import split_params
+
+
+def test_quant_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 64, 4, 32)), jnp.float32)
+    q, s = quantize_kv(x)
+    xr = dequantize_kv(q, s, jnp.float32)
+    # absmax int8: max error <= scale/2 = absmax/254 per row
+    err = np.max(np.abs(np.asarray(xr - x)))
+    bound = float(jnp.max(jnp.abs(x))) / 254 + 1e-6
+    assert err <= bound * 1.2, (err, bound)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+
+
+def test_int8_cache_decode_parity():
+    """Greedy decode logits with int8 cache track the fp cache closely."""
+    cfg_fp = get_config("yi_9b").reduced()
+    cfg_q = cfg_fp.replace(kv_cache_dtype="int8")
+    params, _ = split_params(T.model_init(jax.random.PRNGKey(0), cfg_fp))
+    batch = {k: jnp.asarray(v) for k, v in make_batch_for(cfg_fp, 24, 1, seed=1).items()}
+
+    outs = {}
+    for name, cfg in (("fp", cfg_fp), ("int8", cfg_q)):
+        last, caches = T.prefill(params, batch, cfg, total_len=32)
+        logits = [np.asarray(last)]
+        tok = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+        for t in range(24, 28):
+            lg, caches = T.decode_step(params, caches, tok, jnp.asarray(t, jnp.int32), cfg)
+            logits.append(np.asarray(lg))
+            tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        outs[name] = np.stack(logits)
+
+    # same greedy tokens and close logits
+    assert np.array_equal(outs["fp"].argmax(-1), outs["int8"].argmax(-1))
+    rel = np.abs(outs["fp"] - outs["int8"]).max() / (np.abs(outs["fp"]).max() + 1e-9)
+    assert rel < 0.05, rel
+
+
+def test_int8_cache_halves_bytes():
+    cfg = get_config("yi_9b")
+    c_fp = T.init_caches(cfg, 2, 1024)
+    c_q = T.init_caches(cfg.replace(kv_cache_dtype="int8"), 2, 1024)
+    bytes_fp = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c_fp))
+    bytes_q = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(c_q))
+    assert bytes_q < 0.56 * bytes_fp, (bytes_q, bytes_fp)

@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests (reduced configs) + model-level invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, all_configs, get_config
+from repro.data import make_batch_for
+from repro.models import transformer as T
+from repro.models import layers as L
+from repro.models.module import split_params, param_count
+from repro.sharding.rules import LOCAL_CTX
+
+ARCHS = [a for a in ARCH_IDS if a != "paper_logreg"]
+
+
+def _setup(arch, B=2, S=64):
+    cfg = get_config(arch).reduced()
+    params, _ = split_params(T.model_init(jax.random.PRNGKey(0), cfg))
+    batch = {k: jnp.asarray(v) for k, v in make_batch_for(cfg, S, B, seed=1).items()}
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_train(arch):
+    """Reduced variant: one forward/train step, output shapes + no NaNs."""
+    cfg, params, batch = _setup(arch)
+    per_ex, aux, logits = jax.jit(lambda p, b: T.forward_train(p, b, cfg))(params, batch)
+    assert per_ex.shape == (2,)
+    assert logits.shape == (2, 64, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(per_ex))), arch
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_decreases_loss(arch):
+    from repro.core.guided import GuidedConfig
+    from repro.optim import constant, get_optimizer
+    from repro.train import steps as S
+
+    cfg = get_config(arch).reduced()
+    gcfg = GuidedConfig(mode="ssgd", guided=True, rho=3)
+    opt = get_optimizer("sgd")
+    params, _, gstate = S.make_train_state(jax.random.PRNGKey(0), cfg, gcfg, opt, n_workers=2)
+    step = jax.jit(S.build_train_step(cfg, gcfg, opt, LOCAL_CTX, constant(1e-2), n_workers=2))
+    batch = {k: jnp.asarray(v) for k, v in make_batch_for(cfg, 32, 4, seed=0).items()}
+    losses = []
+    for _ in range(5):
+        params, gstate, m = step(params, gstate, batch)
+        losses.append(float(m["loss"]))
+    assert np.all(np.isfinite(losses)), arch
+    assert losses[-1] < losses[0], (arch, losses)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS if get_config(a).supports_decode])
+def test_decode_consistent_with_forward(arch):
+    """Greedy decode logits == teacher-forced forward logits at each position.
+    MoE archs: capacity clipped at no-drop so prefill/forward see identical
+    routing (token-drop patterns legitimately differ with sequence length)."""
+    cfg, params, batch = _setup(arch, B=1, S=32)
+    if cfg.moe is not None:
+        import dataclasses as _dc
+        cfg = cfg.replace(moe=_dc.replace(cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    per_ex, aux, logits_tf = T.forward_train(params, batch, cfg)
+
+    # prompt must cover the VLM patch block (positions 1..1+n_patches)
+    PL = 24
+    prompt = {k: (v[:, :PL] if k in ("tokens", "labels") else v) for k, v in batch.items()}
+    last, caches = T.prefill(params, prompt, cfg, total_len=32)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(logits_tf[:, PL - 1]),
+                               atol=2e-2, rtol=2e-2)
+    # feed the TRUE next tokens and compare against teacher-forced logits
+    for t in range(PL, PL + 4):
+        tok = batch["tokens"][:, t : t + 1]
+        logits, caches = T.decode_step(params, caches, tok, jnp.asarray(t, jnp.int32), cfg)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_tf[:, t]),
+                                   atol=2e-2, rtol=2e-2)
+
+
+def test_sliding_window_blocked_equals_masked():
+    """Block-local SWA path == masked dense SWA (exactness of the banding)."""
+    rng = np.random.default_rng(0)
+    B, S, H, K, dh, W = 1, 256, 4, 2, 32, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, K, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, K, dh)), jnp.float32)
+    blocked = L.attention(q, k, v, n_kv_heads=K, causal=True, window=W)  # S > 2W: blocked
+    qg = q.reshape(B, S, K, H // K, dh)
+    qi, kj = jnp.arange(S)[:, None], jnp.arange(S)[None, :]
+    mask = (qi >= kj) & (qi - kj < W)
+    dense = L._sdpa(qg, k, v, mask[None, None, None], 1.0 / np.sqrt(dh)).reshape(B, S, H, dh)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(dense), atol=1e-5)
+
+
+def test_vlm_patch_scatter_changes_prefix_only():
+    cfg, params, batch = _setup("llava_next_mistral_7b", B=1, S=64)
+    p2 = dict(batch)
+    p2["patches"] = batch["patches"] + 1.0
+    _, _, l1 = T.forward_train(params, batch, cfg)
+    _, _, l2 = T.forward_train(params, p2, cfg)
+    assert not np.allclose(np.asarray(l1), np.asarray(l2))
+
+
+def test_encoder_only_has_no_decode():
+    cfg = get_config("hubert_xlarge").reduced()
+    params, _ = split_params(T.model_init(jax.random.PRNGKey(0), cfg))
+    with pytest.raises(ValueError):
+        T.decode_step(params, {}, jnp.zeros((1, 1), jnp.int32), 0, cfg)
+
+
+def test_param_counts_full_configs():
+    """Full (non-reduced) configs should be in the advertised parameter range."""
+    expected = {  # rough total-param targets (B = 1e9), generous tolerance
+        "yi_9b": (7, 11),
+        "granite_20b": (15, 25),
+        "mistral_large_123b": (100, 140),
+        "grok_1_314b": (250, 370),
+        "qwen3_moe_235b_a22b": (180, 280),
+        "jamba_1_5_large_398b": (330, 470),
+        "minicpm_2b": (1.5, 3.5),
+        "llava_next_mistral_7b": (6, 9),
+        "hubert_xlarge": (0.7, 1.3),
+        "xlstm_350m": (0.25, 0.6),
+    }
+    for arch, (lo, hi) in expected.items():
+        cfg = get_config(arch)
+        boxed = jax.eval_shape(lambda c=cfg: T.model_init(jax.random.PRNGKey(0), c))
+        n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(split_params(boxed)[0]))
+        assert lo * 1e9 <= n <= hi * 1e9, (arch, n / 1e9)

@@ -1,0 +1,78 @@
+"""Optimizer math and schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adagrad, adam, constant, cosine, get_optimizer, momentum, rmsprop, sgd, wsd
+
+
+def _tree():
+    return {"a": jnp.asarray([1.0, -2.0]), "b": jnp.asarray([[0.5]])}
+
+
+def _grad():
+    return {"a": jnp.asarray([0.1, 0.2]), "b": jnp.asarray([[-0.3]])}
+
+
+def test_sgd_update():
+    opt = sgd()
+    s = opt.init(_tree())
+    upd, s = opt.update(_grad(), s, _tree(), 0.5)
+    np.testing.assert_allclose(np.asarray(upd["a"]), [-0.05, -0.1], atol=1e-7)
+
+
+def test_rmsprop_matches_paper_formula():
+    """Paper Fig. 11: r = beta r + (1-beta) v^2; W -= eta v / sqrt(r + eps)."""
+    opt = rmsprop(beta=0.9, eps=1e-8)
+    p, g = _tree(), _grad()
+    s = opt.init(p)
+    upd, s = opt.update(g, s, p, 0.2)
+    r = 0.1 * np.asarray(g["a"]) ** 2
+    expect = -0.2 * np.asarray(g["a"]) / np.sqrt(r + 1e-8)
+    np.testing.assert_allclose(np.asarray(upd["a"]), expect, rtol=1e-6)
+
+
+def test_adagrad_accumulates():
+    opt = adagrad()
+    p, g = _tree(), _grad()
+    s = opt.init(p)
+    _, s = opt.update(g, s, p, 0.1)
+    _, s = opt.update(g, s, p, 0.1)
+    np.testing.assert_allclose(np.asarray(s["r"]["a"]), 2 * np.asarray(g["a"]) ** 2, rtol=1e-6)
+
+
+def test_adam_bias_correction_first_step():
+    opt = adam(b1=0.9, b2=0.999)
+    p, g = _tree(), _grad()
+    s = opt.init(p)
+    upd, s = opt.update(g, s, p, 1e-3)
+    # after bias correction the first step is ~ -lr * sign(g)
+    np.testing.assert_allclose(np.asarray(upd["a"]), -1e-3 * np.sign(g["a"]), rtol=1e-3)
+
+
+def test_momentum_accumulates_direction():
+    opt = momentum(beta=0.9)
+    p, g = _tree(), _grad()
+    s = opt.init(p)
+    upd1, s = opt.update(g, s, p, 0.1)
+    upd2, s = opt.update(g, s, p, 0.1)
+    assert abs(float(upd2["a"][0])) > abs(float(upd1["a"][0]))
+
+
+def test_schedules():
+    assert float(constant(0.2)(100)) == pytest.approx(0.2)
+    c = cosine(1.0, warmup=10, total=110)
+    assert float(c(0)) == pytest.approx(0.0)
+    assert float(c(10)) == pytest.approx(1.0, abs=1e-3)
+    assert float(c(110)) == pytest.approx(0.1, abs=1e-3)
+    w = wsd(1.0, warmup=10, stable=50, decay=40)
+    assert float(w(5)) == pytest.approx(0.5)
+    assert float(w(30)) == pytest.approx(1.0)
+    assert float(w(100)) == pytest.approx(0.01, abs=1e-3)
+    assert float(w(45)) == pytest.approx(1.0)  # still in stable phase
+
+
+def test_registry():
+    for name in ("sgd", "momentum", "rmsprop", "adagrad", "adam"):
+        assert get_optimizer(name).name == name

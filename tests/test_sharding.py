@@ -1,0 +1,86 @@
+"""Sharding-rule resolution invariants (no mesh devices needed for specs)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import (
+    AxisRules,
+    DEFAULT_RULES,
+    MULTIPOD_RULES,
+    SERVE_TP_ONLY_RULES,
+    logical_to_spec,
+)
+
+
+class FakeMesh:
+    """Duck-typed mesh: logical_to_spec only reads .shape (a dict)."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+MESH = FakeMesh(data=16, model=16)
+MESH3 = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_basic_resolution():
+    assert logical_to_spec(("fsdp", "tp"), DEFAULT_RULES, MESH, (4096, 4096)) == P("data", "model")
+    assert logical_to_spec((None, "tp"), DEFAULT_RULES, MESH, (10, 64)) == P(None, "model")
+
+
+def test_divisibility_fallback_replicates():
+    # 8 experts cannot shard over 16-way data: dim is left replicated
+    spec = logical_to_spec(("expert", "fsdp", "tp"), DEFAULT_RULES, MESH, (8, 4096, 32768))
+    assert spec == P(None, "data", "model")
+    # 128 experts CAN shard; then fsdp's data axis is taken -> d replicated
+    spec = logical_to_spec(("expert", "fsdp", "tp"), DEFAULT_RULES, MESH, (128, 4096, 1536))
+    assert spec == P("data", None, "model")
+
+
+def test_no_axis_reuse():
+    spec = logical_to_spec(("fsdp", "fsdp"), DEFAULT_RULES, MESH, (64, 64))
+    assert spec == P("data", None)
+
+
+def test_multipod_batch_axes():
+    spec = logical_to_spec(("batch", None), MULTIPOD_RULES, MESH3, (256, 128))
+    assert spec == P(("pod", "data"), None)
+    # batch=1 divides nothing: replicated
+    spec = logical_to_spec(("batch", None), MULTIPOD_RULES, MESH3, (1, 128))
+    assert spec == P(None, None)
+
+
+def test_partial_axis_prefix():
+    # batch 32 divides pod*data=32 fully
+    spec = logical_to_spec(("batch",), MULTIPOD_RULES, MESH3, (32,))
+    assert spec == P(("pod", "data"))
+    # batch 2 divides pod=2 but not pod*data: falls back to prefix (pod,)
+    spec = logical_to_spec(("batch",), MULTIPOD_RULES, MESH3, (2,))
+    assert spec == P("pod")
+
+
+def test_serve_tp_rules_disable_fsdp():
+    spec = logical_to_spec(("fsdp", "tp"), SERVE_TP_ONLY_RULES, MESH, (4096, 4096))
+    assert spec == P(None, "model")
+
+
+@given(
+    st.lists(st.sampled_from(["fsdp", "tp", "batch", "expert", None]), min_size=1, max_size=4),
+    st.lists(st.sampled_from([1, 2, 8, 16, 64, 4096]), min_size=1, max_size=4),
+)
+@settings(max_examples=100, deadline=None)
+def test_spec_always_valid(logical, dims):
+    n = min(len(logical), len(dims))
+    logical, dims = tuple(logical[:n]), tuple(dims[:n])
+    spec = logical_to_spec(logical, DEFAULT_RULES, MESH, dims)
+    # 1) every sharded dim divides evenly
+    used = []
+    for d, s in zip(dims, spec):
+        axes = (s,) if isinstance(s, str) else (s or ())
+        size = int(np.prod([MESH.shape[a] for a in axes])) if axes else 1
+        assert d % size == 0
+        used.extend(axes)
+    # 2) no mesh axis used twice
+    assert len(used) == len(set(used))

@@ -1,0 +1,109 @@
+"""End-to-end behaviour tests: training runs for every algorithm mode, decode
+serving, the CLI drivers, and guided-vs-plain integration behaviour."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.guided import GuidedConfig
+from repro.data import make_batch_for
+from repro.optim import constant, get_optimizer
+from repro.sharding.rules import LOCAL_CTX
+from repro.train import steps as S
+
+
+def _train(arch="yi_9b", mode="ssgd", guided=True, steps=8, opt_name="sgd",
+           correction="fused", n_micro=1, seed=0, lr=None):
+    cfg = get_config(arch).reduced()
+    gcfg = GuidedConfig(mode=mode, guided=guided, rho=3, correction=correction)
+    opt = get_optimizer(opt_name)
+    if lr is None:
+        # adaptive optimizers take ~unit-normalized steps: much smaller lr
+        lr = 1e-2 if opt_name in ("sgd", "momentum") else 1e-3
+    params, _, gstate = S.make_train_state(jax.random.PRNGKey(seed), cfg, gcfg, opt, n_workers=4)
+    step = jax.jit(S.build_train_step(cfg, gcfg, opt, LOCAL_CTX, constant(lr),
+                                      n_micro=n_micro, n_workers=4))
+    batch = {k: jnp.asarray(v) for k, v in make_batch_for(cfg, 32, 8, seed=seed).items()}
+    losses = []
+    for _ in range(steps):
+        params, gstate, m = step(params, gstate, batch)
+        losses.append(float(m["loss"]))
+    return losses
+
+
+@pytest.mark.parametrize("mode,guided", [("seq", False), ("ssgd", False), ("ssgd", True),
+                                         ("asgd", True), ("dc_asgd", False)])
+def test_all_modes_train(mode, guided):
+    losses = _train(mode=mode, guided=guided)
+    assert np.all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "rmsprop", "adagrad", "adam"])
+def test_all_optimizers_train(opt_name):
+    losses = _train(opt_name=opt_name)
+    assert np.all(np.isfinite(losses)) and losses[-1] < losses[0]
+
+
+def test_two_pass_close_to_fused():
+    """The paper's literal two-pass replay and the fused weighted-loss form:
+    identical before the first window end; afterwards both must keep
+    descending. (They are not numerically identical by design: fused applies
+    the correction inside the round update at the effective step eta*c, the
+    literal replay uses eta — both readings of Fig. 7; `correction_scale`
+    interpolates between them.)"""
+    a = _train(correction="fused", steps=7, lr=1e-3)
+    b = _train(correction="two_pass", steps=7, lr=1e-3)
+    np.testing.assert_allclose(a[:3], b[:3], rtol=1e-5)  # identical pre-window
+    assert np.all(np.isfinite(b)) and b[-1] < b[0]
+    assert np.all(np.isfinite(a)) and a[-1] < a[0]
+
+
+def test_microbatching_matches_full_batch():
+    """Gradient accumulation is loss-equivalent to the full-batch step."""
+    a = _train(n_micro=1, steps=4)
+    b = _train(n_micro=2, steps=4)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+def test_train_cli(tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "minicpm-2b", "--reduced",
+         "--steps", "6", "--batch", "4", "--workers", "2", "--mode", "ssgd", "--guided",
+         "--seq", "32", "--log-every", "5", "--metrics-out", str(tmp_path / "m.json")],
+        capture_output=True, text=True, timeout=400,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu",
+             "HOME": "/root"},
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "done: final loss" in out.stdout
+
+
+def test_serve_cli():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "xlstm-350m", "--reduced",
+         "--batch", "2", "--prompt-len", "16", "--gen", "4"],
+        capture_output=True, text=True, timeout=400,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu",
+             "HOME": "/root"},
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "decode:" in out.stdout
+
+
+def test_guided_state_is_pytree_roundtrippable(tmp_path):
+    from repro.checkpoint import restore, save
+
+    cfg = get_config("xlstm_350m").reduced()
+    gcfg = GuidedConfig(mode="dc_asgd")
+    opt = get_optimizer("rmsprop")
+    params, _, gstate = S.make_train_state(jax.random.PRNGKey(0), cfg, gcfg, opt, n_workers=2)
+    save(str(tmp_path), 0, {"params": params, "gstate": gstate})
+    out = restore(str(tmp_path), 0, {"params": params, "gstate": gstate})
+    n1 = jax.tree.leaves(out["gstate"])
+    n2 = jax.tree.leaves(gstate)
+    assert len(n1) == len(n2)
