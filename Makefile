@@ -1,0 +1,17 @@
+# Convenience targets around the tier-1 verify command (see ROADMAP.md).
+
+PY := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
+
+.PHONY: test test-fast bench quickstart
+
+test:            ## tier-1: full suite, fail fast
+	$(PY) -m pytest -x -q
+
+test-fast:       ## skip the multi-minute @slow tests
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:           ## paper tables/figures + framework benchmarks (quick mode)
+	$(PY) benchmarks/run.py
+
+quickstart:
+	$(PY) examples/quickstart.py

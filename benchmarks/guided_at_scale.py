@@ -1,52 +1,42 @@
 """Beyond-paper experiment: the paper's stated future work — "apply gSSGD to
 deep networks" — realized on a transformer LM with the scalable guided
-optimizer (repro.core.guided), CPU-sized.
+optimizer, CPU-sized, through the unified engine API.
 
 Setup: a reduced decoder LM on the synthetic Markov stream, c=8 workers whose
 shards draw from DIFFERENT corpora mixtures (real per-worker loss variance),
 trained with (a) plain SSGD, (b) ASGD with simulated staleness tau=rho, (c)
 guided ASGD (the paper's compensation), (d) DC-ASGD (Zheng et al. 2017
-baseline). Reports final train loss: delay should hurt (b vs a), the guided
-correction and DC-ASGD should recover part (c, d vs b).
+baseline), (e) Gap-Aware dampening (registry plugin). Reports final train
+loss: delay should hurt (b vs a), the compensation strategies should recover
+part (c-e vs b).
 """
 from __future__ import annotations
 
 import json
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.core.guided import GuidedConfig
-from repro.data import synthetic_lm_batches
-from repro.optim import constant, get_optimizer
-from repro.sharding.rules import LOCAL_CTX
-from repro.train import steps as S
+from repro.engine import ExperimentSpec, Trainer
 
 VARIANTS = {
-    "SSGD": dict(mode="ssgd", guided=False),
-    "gSSGD": dict(mode="ssgd", guided=True),
-    "ASGD(sim)": dict(mode="asgd", guided=False),
-    "gASGD(sim)": dict(mode="asgd", guided=True),
-    "DC-ASGD": dict(mode="dc_asgd", guided=False),
+    "SSGD": dict(mode="ssgd", strategy="none"),
+    "gSSGD": dict(mode="ssgd", strategy="guided_fused"),
+    "ASGD(sim)": dict(mode="asgd", strategy="none"),
+    "gASGD(sim)": dict(mode="asgd", strategy="guided_fused"),
+    "DC-ASGD": dict(mode="asgd", strategy="dc_asgd"),
+    "GapAware": dict(mode="asgd", strategy="gap_aware"),
 }
 
 
 def run(steps=150, c=8, batch=16, seq=64, lr=2e-2, rho=10, seed=0, arch="yi_9b", verbose=True):
-    cfg = get_config(arch).reduced()
     out = {}
     for name, kw in VARIANTS.items():
-        gcfg = GuidedConfig(rho=rho, **kw)
-        opt = get_optimizer("sgd")
-        params, _, gstate = S.make_train_state(jax.random.PRNGKey(seed), cfg, gcfg, opt, n_workers=c)
-        step = jax.jit(S.build_train_step(cfg, gcfg, opt, LOCAL_CTX, constant(lr), n_workers=c))
-        data = synthetic_lm_batches(cfg.vocab_size, seq, batch, seed=seed, n_corpora=c)
-        losses = []
-        for _ in range(steps):
-            b = {k: jnp.asarray(v) for k, v in next(data).items()}
-            params, gstate, m = step(params, gstate, b)
-            losses.append(float(m["loss"]))
+        spec = ExperimentSpec(
+            backend="mesh", arch=arch, reduced=True, rho=rho, lr=lr, seed=seed,
+            steps=steps, seq_len=seq, global_batch=batch, workers=c,
+            optimizer="sgd", schedule="constant", **kw)
+        report = Trainer.from_spec(spec).fit()
+        losses = [h["loss"] for h in report.history]
         tail = float(np.mean(losses[-10:]))
         out[name] = {"final_loss": tail, "curve": losses[:: max(1, steps // 40)]}
         if verbose:

@@ -7,8 +7,8 @@ import json
 
 import numpy as np
 
-from repro.core.parameter_server import PSConfig, train_ps
 from repro.data import load_dataset, train_test_split
+from repro.engine import ExperimentSpec, Trainer
 
 KS = [0, 1, 2, 4, 8, 10]
 
@@ -20,10 +20,12 @@ def sweep(dataset="pima", runs=10, epochs=50):
         accs = []
         for run in range(runs):
             Xtr, ytr, Xte, yte = train_test_split(X, y, seed=run)
-            cfg = PSConfig(mode="ssgd", guided=k > 0, rho=10, epochs=epochs,
-                           seed=run, max_consistent=max(k, 1))
-            res = train_ps(Xtr, ytr, kcls, cfg, Xte, yte)
-            accs.append(res["test_accuracy"] * 100)
+            spec = ExperimentSpec(
+                backend="sim", mode="ssgd",
+                strategy="guided_fused" if k > 0 else "none",
+                rho=10, epochs=epochs, seed=run, max_consistent=max(k, 1))
+            report = Trainer.from_spec(spec).fit((Xtr, ytr, kcls, Xte, yte))
+            accs.append(report.test_accuracy * 100)
         out[f"k={k}"] = {"mean": float(np.mean(accs)), "std": float(np.std(accs))}
         print(f"  {dataset:16s} k={k:2d} acc={out[f'k={k}']['mean']:5.1f}±{out[f'k={k}']['std']:3.1f}",
               flush=True)

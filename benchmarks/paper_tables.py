@@ -12,8 +12,8 @@ import math
 
 import numpy as np
 
-from repro.core.parameter_server import algo_config, train_ps
 from repro.data import DATASETS, load_dataset, train_test_split
+from repro.engine import ExperimentSpec, Trainer
 
 CANONICAL = ["SGD", "gSGD", "SSGD", "gSSGD", "ASGD", "gASGD"]
 VARIANTS = ["SSGD", "gSSGD", "SRMSprop", "gSRMSprop", "SAdagrad", "gSAdagrad"]
@@ -64,9 +64,9 @@ def run_dataset(name: str, algos, runs: int = 30, epochs: int = 50, rho: int = 1
         accs = []
         for run in range(runs):
             Xtr, ytr, Xte, yte = train_test_split(X, y, seed=run)
-            cfg = algo_config(algo, epochs=epochs, seed=run, rho=rho)
-            res = train_ps(Xtr, ytr, k, cfg, Xte, yte)
-            accs.append(res["test_accuracy"] * 100)
+            spec = ExperimentSpec.for_algo(algo, epochs=epochs, seed=run, rho=rho)
+            report = Trainer.from_spec(spec).fit((Xtr, ytr, k, Xte, yte))
+            accs.append(report.test_accuracy * 100)
         out[algo] = accs
     return out
 

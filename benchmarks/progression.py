@@ -8,8 +8,8 @@ import json
 
 import numpy as np
 
-from repro.core.parameter_server import ALGO_NAMES, algo_config, train_ps
 from repro.data import load_dataset, train_test_split
+from repro.engine import ExperimentSpec, Trainer
 
 ALGOS = ["SGD", "gSGD", "SSGD", "gSSGD", "ASGD", "gASGD"]
 
@@ -21,9 +21,10 @@ def progression(dataset="new_thyroid", runs: int = 5, epochs: int = 50, points: 
         curves = []
         for run in range(runs):
             Xtr, ytr, Xte, yte = train_test_split(X, y, seed=run)
-            res = train_ps(Xtr, ytr, k, algo_config(algo, epochs=epochs, seed=run), Xte, yte)
-            t = np.array([h[0] for h in res["history"]], float)
-            e = np.array([h[1] for h in res["history"]], float)
+            spec = ExperimentSpec.for_algo(algo, epochs=epochs, seed=run)
+            report = Trainer.from_spec(spec).fit((Xtr, ytr, k, Xte, yte))
+            t = np.array([h[0] for h in report.history], float)
+            e = np.array([h[1] for h in report.history], float)
             # resample onto a common grid of `points` fractions of training
             grid = np.linspace(t[0], t[-1], points)
             curves.append(np.interp(grid, t, e))

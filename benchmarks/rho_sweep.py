@@ -11,8 +11,8 @@ import json
 
 import numpy as np
 
-from repro.core.parameter_server import PSConfig, train_ps
 from repro.data import load_dataset, train_test_split
+from repro.engine import ExperimentSpec, Trainer
 
 RHOS = [1, 2, 4, 10, 17, 25, 36]
 
@@ -28,10 +28,12 @@ def sweep(dataset: str, runs: int = 10, epochs: int = 50, guided_both=True):
                 mode = "seq" if rho == 1 else "ssgd"
                 # batch_size 4 so even the largest rho has enough mini-batches
                 # per round on the small datasets (c = rho workers)
-                cfg = PSConfig(mode=mode, guided=guided, rho=rho, epochs=epochs,
-                               seed=run, batch_size=4)
-                res = train_ps(Xtr, ytr, k, cfg, Xte, yte)
-                accs.append(res["test_accuracy"] * 100)
+                spec = ExperimentSpec(
+                    backend="sim", mode=mode,
+                    strategy="guided_fused" if guided else "none",
+                    rho=rho, epochs=epochs, seed=run, batch_size=4)
+                report = Trainer.from_spec(spec).fit((Xtr, ytr, k, Xte, yte))
+                accs.append(report.test_accuracy * 100)
             key = f"rho={rho}" + ("/guided" if guided else "")
             out[key] = {"mean": float(np.mean(accs)), "std": float(np.std(accs))}
             print(f"  {dataset:26s} {key:16s} acc={out[key]['mean']:5.1f}±{out[key]['std']:3.1f}",

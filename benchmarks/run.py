@@ -92,7 +92,9 @@ def bench_guided_at_scale(full: bool):
     gap = out["ASGD(sim)"]["final_loss"] - out["SSGD"]["final_loss"]
     rec = out["ASGD(sim)"]["final_loss"] - out["gASGD(sim)"]["final_loss"]
     dc = out["ASGD(sim)"]["final_loss"] - out["DC-ASGD"]["final_loss"]
-    print(f"beyond_guided_at_scale,{us:.0f},staleness_damage={gap:+.4f};guided_recovers={rec:+.4f};dcasgd_recovers={dc:+.4f}")
+    ga = out["ASGD(sim)"]["final_loss"] - out["GapAware"]["final_loss"]
+    print(f"beyond_guided_at_scale,{us:.0f},staleness_damage={gap:+.4f};guided_recovers={rec:+.4f};"
+          f"dcasgd_recovers={dc:+.4f};gap_aware_recovers={ga:+.4f}")
     return out
 
 

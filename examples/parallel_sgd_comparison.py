@@ -1,13 +1,14 @@
 """The paper's core experiment in miniature (Tables 2-3): compare sequential,
 synchronous and asynchronous SGD with and without the guided delay
-compensation, on two of the UCI-analog datasets.
+compensation, on two of the UCI-analog datasets — driven entirely through the
+unified engine API (`ExperimentSpec.for_algo` + `Trainer`).
 
 Run:  PYTHONPATH=src python examples/parallel_sgd_comparison.py
 """
 import numpy as np
 
-from repro.core.parameter_server import algo_config, train_ps
 from repro.data import load_dataset, train_test_split
+from repro.engine import ExperimentSpec, Trainer
 
 ALGOS = ["SGD", "gSGD", "SSGD", "gSSGD", "ASGD", "gASGD"]
 RUNS, EPOCHS = 8, 50
@@ -19,8 +20,9 @@ for ds in ("new_thyroid", "breast_cancer_diagnostic"):
         accs = []
         for run in range(RUNS):
             Xtr, ytr, Xte, yte = train_test_split(X, y, seed=run)
-            res = train_ps(Xtr, ytr, k, algo_config(algo, epochs=EPOCHS, seed=run), Xte, yte)
-            accs.append(res["test_accuracy"] * 100)
+            spec = ExperimentSpec.for_algo(algo, epochs=EPOCHS, seed=run)
+            report = Trainer.from_spec(spec).fit((Xtr, ytr, k, Xte, yte))
+            accs.append(report.test_accuracy * 100)
         print(f"  {algo:8s} acc = {np.mean(accs):5.1f} ± {np.std(accs):4.1f}")
 print("\nExpected pattern (paper): SSGD/ASGD < SGD (delay hurts); "
       "gSSGD recovers much of the gap; gSGD >= SGD.")

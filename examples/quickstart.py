@@ -1,43 +1,40 @@
 """Quickstart: train a reduced assigned architecture with guided SSGD.
 
-Shows the three moving parts of the framework in ~40 lines:
-  1. a model from the architecture registry (reduced for CPU),
-  2. the guided delay-compensated optimizer (the paper's contribution),
-  3. the jitted train step with per-worker consistency tracking.
+Shows the three moving parts of the framework in ~30 lines:
+  1. an ExperimentSpec naming the experiment (arch, mode, strategy),
+  2. the DelayCompensator strategy registry (the paper's contribution is
+     `guided_fused`; swap the string for `dc_asgd`, `gap_aware`, ...),
+  3. the Trainer facade running the jitted train step with per-worker
+     consistency tracking.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
+from repro.engine import ExperimentSpec, Trainer
 
-from repro.configs import get_config
-from repro.core.guided import GuidedConfig
-from repro.data import make_batch_for
-from repro.optim import constant, get_optimizer
-from repro.sharding.rules import LOCAL_CTX
-from repro.train import steps as S
-
-ARCH = "yi-9b"          # any of the 10 assigned archs
-C_WORKERS = 4           # the paper's c (= data-parallel workers on a real mesh)
-
-cfg = get_config(ARCH).reduced()
-gcfg = GuidedConfig(mode="ssgd", guided=True, rho=5)   # gSSGD, paper defaults
-opt = get_optimizer("sgd")
-
-params, logical, gstate = S.make_train_state(
-    jax.random.PRNGKey(0), cfg, gcfg, opt, n_workers=C_WORKERS
-)
-train_step = jax.jit(
-    S.build_train_step(cfg, gcfg, opt, LOCAL_CTX, constant(1e-2), n_workers=C_WORKERS)
+spec = ExperimentSpec(
+    backend="mesh",
+    arch="yi_9b",            # any of the 10 assigned archs
+    reduced=True,
+    mode="ssgd",
+    strategy="guided_fused",  # gSSGD, paper defaults
+    rho=5,
+    workers=4,               # the paper's c (= data-parallel workers on a real mesh)
+    lr=1e-2,
+    steps=20,
+    seq_len=32,
+    global_batch=8,
 )
 
-batch = {k: jnp.asarray(v) for k, v in make_batch_for(cfg, seq_len=32, global_batch=8).items()}
-for step in range(20):
-    params, gstate, metrics = train_step(params, gstate, batch)
-    if step % 5 == 0 or float(metrics["corr_weight_sum"]) > 0:
+
+def on_step(step, m, params):
+    corr_w = float(m["corr_weight_sum"])
+    if step % 5 == 0 or corr_w > 0:
         print(
-            f"step {step:3d} loss={float(metrics['loss']):.4f} "
-            f"worker_var={float(metrics['worker_loss_var']):.2e} "
-            f"guided_correction={'FIRED' if float(metrics['corr_weight_sum']) > 0 else '-'}"
+            f"step {step:3d} loss={float(m['loss']):.4f} "
+            f"worker_var={float(m['worker_loss_var']):.2e} "
+            f"guided_correction={'FIRED' if corr_w > 0 else '-'}"
         )
-print("scores per worker:", [round(float(s), 2) for s in gstate.score])
+
+
+report = Trainer.from_spec(spec).fit(on_step=on_step)
+print("scores per worker:", [round(float(s), 2) for s in report.state.score])

@@ -27,7 +27,7 @@ argv = [
     "--arch", "minicpm-2b",
     "--layers", str(args.layers), "--d-model", str(args.d_model), "--d-ff", "2304",
     "--steps", str(args.steps), "--seq", str(args.seq), "--batch", str(args.batch),
-    "--mode", "ssgd", "--guided", "--rho", "10", "--workers", "4",
+    "--mode", "ssgd", "--strategy", "guided_fused", "--rho", "10", "--workers", "4",
     "--optimizer", "sgd", "--lr", "0.05", "--schedule", "wsd",
     "--mesh", args.mesh, "--log-every", "10",
     "--ckpt-dir", "results/ckpt_100m", "--ckpt-every", "100",

@@ -1,0 +1,39 @@
+"""Version-compatibility wrappers over fast-moving jax APIs.
+
+The repo targets the image's pinned jax (0.4.x) but is written against the
+modern spellings. Everything that moved between 0.4 and 0.5+ funnels through
+here so call sites stay on the new API:
+
+  * ``make_mesh(shape, axes)`` — ``jax.make_mesh`` grew an ``axis_types``
+    kwarg (and ``jax.sharding.AxisType``) after 0.4.37; older versions build
+    auto-typed meshes unconditionally, so the kwarg is simply dropped.
+  * ``shard_map(f, mesh, in_specs, out_specs, axis_names)`` — the top-level
+    ``jax.shard_map`` (manual axes named via ``axis_names``, everything else
+    auto) lands in 0.5+. On 0.4.x we lower onto
+    ``jax.experimental.shard_map.shard_map`` with the complementary ``auto``
+    set and ``check_rep=False`` (rep-checking rejects auto axes there).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(shape, axes):
+    """Mesh with every axis in Auto mode, on any supported jax version."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names):
+    """Partial-manual shard_map: `axis_names` become manual, the rest stay auto."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, axis_names=set(axis_names)
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(
+        f, mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False, auto=auto
+    )

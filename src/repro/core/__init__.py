@@ -5,14 +5,31 @@ Two implementations, one semantics:
     (consistency-weighted gradient combination, in-graph, O(c) extra state).
   - core.parameter_server: the literal event-driven parameter-server simulation
     (Figs. 3/4/7 of the paper) used for the faithful paper reproduction.
+
+The guided/consistency names re-export lazily: they live in the jax stack,
+while core.parameter_server is pure numpy — importing the package (e.g. via
+repro.engine's sim backend) must not pay the jax import cost.
 """
-from repro.core.consistency import consistency_increment  # noqa: F401
-from repro.core.guided import (  # noqa: F401
-    GuidedConfig,
-    GuidedState,
-    compensate_dc_asgd,
-    correction_weights,
-    guided_init,
-    refresh_stale,
-    update_scores,
-)
+
+_LAZY = {
+    "consistency_increment": "consistency",
+    "GuidedConfig": "guided",
+    "GuidedState": "guided",
+    "compensate_dc_asgd": "guided",
+    "correction_weights": "guided",
+    "guided_init": "guided",
+    "refresh_stale": "guided",
+    "update_scores": "guided",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(f"repro.core.{_LAZY[name]}"), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

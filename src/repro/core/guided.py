@@ -64,6 +64,7 @@ class GuidedState(NamedTuple):
     prev_avg_loss: jax.Array        # ()
     w_stale: Any                    # params copy or () when not needed
     opt_state: Any                  # inner optimizer state
+    extra: Any = ()                 # strategy-owned state (repro.engine plugins)
 
 
 def guided_init(gcfg: GuidedConfig, params, opt, n_workers: int) -> GuidedState:
@@ -129,9 +130,15 @@ def advance(
     params,
     worker_loss,
     avg_loss,
+    extra=None,
+    score=None,
 ) -> GuidedState:
-    """Post-update bookkeeping: scores, window reset, stale refresh, step."""
-    score = update_scores(state, gcfg, worker_loss, avg_loss)
+    """Post-update bookkeeping: scores, window reset, stale refresh, step.
+    `score` overrides the default consistency accumulation (strategies with
+    custom scoring pass their own pre-reset scores); `extra` replaces the
+    strategy-owned state (None keeps it)."""
+    if score is None:
+        score = update_scores(state, gcfg, worker_loss, avg_loss)
     score = jnp.where(is_window_end(state.step, gcfg), jnp.zeros_like(score), score)
     return GuidedState(
         step=state.step + 1,
@@ -140,4 +147,5 @@ def advance(
         prev_avg_loss=avg_loss,
         w_stale=refresh_stale(state, gcfg, params),
         opt_state=new_opt_state,
+        extra=state.extra if extra is None else extra,
     )

@@ -253,6 +253,8 @@ ALGO_NAMES = {
 
 
 def algo_config(name: str, **kw) -> PSConfig:
+    """Deprecated shim: prefer repro.engine.ExperimentSpec.for_algo(name),
+    which carries the same table and also covers the mesh backend."""
     inv = {v: k for k, v in ALGO_NAMES.items()}
     mode, guided, opt = inv[name]
     return PSConfig(mode=mode, guided=guided, optimizer=opt, **kw)

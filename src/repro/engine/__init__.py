@@ -1,0 +1,47 @@
+"""repro.engine — the unified Experiment/Trainer API over both algorithm stacks.
+
+    from repro.engine import ExperimentSpec, Trainer
+
+    # the paper's gSSGD on the numpy parameter-server sim
+    report = Trainer.from_spec(ExperimentSpec.for_algo("gSSGD", epochs=50)).fit(
+        (Xtr, ytr, n_classes, Xte, yte))
+
+    # the same algorithm on the jitted SPMD mesh trainer
+    report = Trainer.from_spec(ExperimentSpec(
+        backend="mesh", arch="yi_9b", mode="ssgd", strategy="guided_fused")).fit()
+
+New delay-compensation schemes are ~50-line `DelayCompensator` subclasses
+registered with `@register_compensator("name")` — see strategies.py and
+DESIGN.md §2.
+
+The spec/Trainer/Report names import eagerly and stay numpy-light; everything
+touching the jax stack (strategies, the mesh step builder) is re-exported
+lazily so sim-only scripts (paper tables, rho sweeps) don't pay the jax
+import cost.
+"""
+from repro.engine.spec import ALGOS, ExperimentSpec  # noqa: F401
+from repro.engine.trainer import Report, Trainer  # noqa: F401
+
+_LAZY = {
+    "DelayCompensator": "strategies",
+    "compensator_names": "strategies",
+    "get_compensator": "strategies",
+    "register_compensator": "strategies",
+    "strategy_name_for": "strategies",
+    "build_ctx": "mesh",
+    "build_train_step": "mesh",
+    "init_train_state": "mesh",
+    "resolve_strategy": "mesh",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(f"repro.engine.{_LAZY[name]}"), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

@@ -1,0 +1,203 @@
+"""`ExperimentSpec` — one declarative config subsuming both algorithm stacks.
+
+The paper's algorithm family previously lived behind two disjoint configs:
+
+  * `PSConfig` + `train_ps` — the numpy event-driven parameter-server
+    simulator (paper-faithful logistic regression, Tables 2-5 / Figs. 2-14);
+  * `GuidedConfig` + `build_train_step` — the jitted SPMD mesh trainer
+    (transformer-scale gSSGD/gASGD/DC-ASGD).
+
+An ExperimentSpec names ONE experiment — backend, execution mode, compensation
+strategy, optimizer, schedule, mesh, workers, micro-batching — and lowers to
+whichever legacy config its backend needs (`to_ps_config` / `to_guided_config`).
+`Trainer.from_spec(spec).fit(data)` is the single entry point; see DESIGN.md §1
+for the API and §2 for the old-API → new-API migration table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Tuple
+
+from repro.core.parameter_server import PSConfig
+
+if TYPE_CHECKING:  # GuidedConfig lives in the jax stack; import it lazily so
+    from repro.core.guided import GuidedConfig  # sim-only scripts stay numpy-light
+
+BACKENDS = ("mesh", "sim")
+MODES = ("seq", "ssgd", "asgd")
+
+# algorithm names as printed in the paper's tables -> (mode, strategy, optimizer)
+ALGOS = {
+    "SGD": ("seq", "none", "sgd"),
+    "gSGD": ("seq", "guided_fused", "sgd"),
+    "SSGD": ("ssgd", "none", "sgd"),
+    "gSSGD": ("ssgd", "guided_fused", "sgd"),
+    "ASGD": ("asgd", "none", "sgd"),
+    "gASGD": ("asgd", "guided_fused", "sgd"),
+    "SRMSprop": ("ssgd", "none", "rmsprop"),
+    "gSRMSprop": ("ssgd", "guided_fused", "rmsprop"),
+    "SAdagrad": ("ssgd", "none", "adagrad"),
+    "gSAdagrad": ("ssgd", "guided_fused", "adagrad"),
+    "DC-ASGD": ("asgd", "dc_asgd", "sgd"),
+}
+
+_GUIDED_STRATEGIES = ("guided_fused", "guided_two_pass", "dc_asgd_guided")
+_DC_STRATEGIES = ("dc_asgd", "dc_asgd_guided")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One experiment of the paper's algorithm family, on either backend.
+
+    backend="sim" runs the literal numpy parameter-server simulation;
+    backend="mesh" runs the jitted SPMD data-parallel trainer. The shared
+    fields mean the same thing on both; backend-specific fields are ignored
+    by the other backend.
+    """
+
+    backend: str = "mesh"          # mesh | sim
+    # ------------------------------------------------- shared algorithm knobs
+    mode: str = "ssgd"             # seq | ssgd | asgd (execution/delay model)
+    strategy: str = "none"         # DelayCompensator registry name
+    rho: int = 10                  # delay tolerance / correction period
+    max_consistent: int = 4        # paper: replay at most 4 mini-batches
+    optimizer: str = "sgd"
+    lr: float = 0.2                # paper Table 1 default
+    seed: int = 0
+    # ------------------------------------------------------------- sim knobs
+    epochs: int = 50
+    batch_size: int = 16
+    verification_frac: float = 0.2
+    rmsprop_beta: float = 0.9
+    eps: float = 1e-8
+    # ------------------------------------------------------------ mesh knobs
+    arch: str = "yi_9b"
+    reduced: bool = True
+    model_overrides: Tuple = ()    # (("n_layers", 2), ...) applied to the cfg
+    steps: int = 100
+    seq_len: int = 128
+    global_batch: int = 8
+    schedule: str = "constant"     # constant | wsd | cosine
+    warmup: int = 10
+    mesh: str = "local"            # local | host | prod | prod-multipod
+    workers: int = 0               # paper's c; 0 -> data shards of the mesh
+    micro: int = 1                 # gradient-accumulation microbatches
+    staleness: int = 0             # asgd: w_stale refresh period (0 -> rho)
+    dc_lambda: float = 0.04
+    correction_scale: float = 1.0
+    magnitude_weight: float = 0.1
+
+    def __post_init__(self):
+        assert self.backend in BACKENDS, self.backend
+        assert self.mode in MODES, self.mode
+
+    def replace(self, **kw) -> "ExperimentSpec":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------ conversions
+    @property
+    def guided(self) -> bool:
+        return self.strategy in _GUIDED_STRATEGIES
+
+    def to_ps_config(self) -> PSConfig:
+        """Lower to the numpy simulator's config. Any guided_* strategy maps to
+        the paper's literal replay (the sim has exactly one guided path);
+        staleness-Taylor strategies have no sim equivalent."""
+        if self.strategy not in ("none", "guided_fused", "guided_two_pass"):
+            raise ValueError(
+                f"strategy {self.strategy!r} has no parameter-server simulation; "
+                "use backend='mesh'"
+            )
+        return PSConfig(
+            mode=self.mode,
+            guided=self.guided,
+            optimizer=self.optimizer,
+            lr=self.lr,
+            epochs=self.epochs,
+            rho=self.rho,
+            batch_size=self.batch_size,
+            max_consistent=self.max_consistent,
+            verification_frac=self.verification_frac,
+            rmsprop_beta=self.rmsprop_beta,
+            eps=self.eps,
+            seed=self.seed,
+        )
+
+    @classmethod
+    def from_ps_config(cls, cfg: PSConfig, **kw) -> "ExperimentSpec":
+        return cls(
+            backend="sim",
+            mode=cfg.mode,
+            strategy="guided_fused" if cfg.guided else "none",
+            optimizer=cfg.optimizer,
+            lr=cfg.lr,
+            epochs=cfg.epochs,
+            rho=cfg.rho,
+            batch_size=cfg.batch_size,
+            max_consistent=cfg.max_consistent,
+            verification_frac=cfg.verification_frac,
+            rmsprop_beta=cfg.rmsprop_beta,
+            eps=cfg.eps,
+            seed=cfg.seed,
+            **kw,
+        )
+
+    def to_guided_config(self) -> "GuidedConfig":
+        """Lower to the mesh trainer's config. strategy="dc_asgd" keeps the
+        legacy mode="dc_asgd" spelling so `needs_stale`/compensation semantics
+        are bit-identical to the pre-engine step."""
+        from repro.core.guided import GuidedConfig
+
+        return GuidedConfig(
+            mode="dc_asgd" if self.strategy in _DC_STRATEGIES else self.mode,
+            guided=self.guided,
+            rho=self.rho,
+            max_consistent=self.max_consistent,
+            staleness=self.staleness,
+            dc_lambda=self.dc_lambda,
+            correction="two_pass" if self.strategy == "guided_two_pass" else "fused",
+            correction_scale=self.correction_scale,
+            magnitude_weight=self.magnitude_weight,
+        )
+
+    @classmethod
+    def from_guided_config(cls, gcfg: "GuidedConfig", **kw) -> "ExperimentSpec":
+        from repro.engine.strategies import strategy_name_for
+
+        return cls(
+            backend="mesh",
+            mode="asgd" if gcfg.mode == "dc_asgd" else gcfg.mode,
+            strategy=strategy_name_for(gcfg),
+            rho=gcfg.rho,
+            max_consistent=gcfg.max_consistent,
+            staleness=gcfg.staleness,
+            dc_lambda=gcfg.dc_lambda,
+            correction_scale=gcfg.correction_scale,
+            magnitude_weight=gcfg.magnitude_weight,
+            **kw,
+        )
+
+    @classmethod
+    def for_algo(cls, name: str, **kw) -> "ExperimentSpec":
+        """Spec for a paper-table algorithm name ('gSSGD', 'SRMSprop', ...).
+        Defaults to the sim backend (the paper's own scale) except for
+        strategies with no sim equivalent (DC-ASGD); pass backend explicitly
+        for the other analog."""
+        try:
+            mode, strategy, optimizer = ALGOS[name]
+        except KeyError:
+            raise KeyError(f"unknown algorithm {name!r}; known: {', '.join(ALGOS)}") from None
+        sim_ok = strategy in ("none", "guided_fused", "guided_two_pass")
+        kw.setdefault("backend", "sim" if sim_ok else "mesh")
+        return cls(mode=mode, strategy=strategy, optimizer=optimizer, **kw)
+
+    def model_config(self):
+        """Resolve arch + reduced + overrides to a ModelConfig (mesh backend)."""
+        from repro.configs import get_config
+
+        cfg = get_config(self.arch)
+        if self.reduced:
+            cfg = cfg.reduced()
+        if self.model_overrides:
+            cfg = cfg.replace(**dict(self.model_overrides))
+        return cfg

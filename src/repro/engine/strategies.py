@@ -1,0 +1,224 @@
+"""Pluggable delay-compensation strategies (the `DelayCompensator` registry).
+
+The paper's guided correction, its two-pass literal variant, DC-ASGD's Taylor
+compensation (Zheng et al. 2017) and Gap-Aware dampening (Barkai et al. 2019)
+are all the same shape: a small set of hooks around one SPMD train step.
+A strategy never owns the training loop — it plugs into the four seams the
+generic step in `repro.engine.mesh` exposes:
+
+  init(params, n_workers)        -> strategy-owned extra state (a pytree; ())
+  correction_weights(state, c)   -> (c,) weights folded into THIS backward
+                                    pass as sum_i w_i * L_i ("fused" replay)
+  compensate_grads(grads, params, state) -> adjusted gradients (post-backward)
+  correct(params, state, lr, weighted_grad_fn) -> params after the optimizer
+                                    step (the paper's literal second update)
+  score(state, worker_loss, avg_loss) -> new (c,) consistency scores
+  update_extra(state, grads)     -> next extra state (window bookkeeping)
+
+Register new schemes with `@register_compensator("name")`; they become
+selectable from `ExperimentSpec(strategy="name")` and the `--strategy` flag of
+`repro.launch.train` without touching the train step. See DESIGN.md §2 for the
+protocol contract and a migration table from the legacy APIs.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import guided as G
+
+
+class DelayCompensator:
+    """Base strategy: no compensation, paper-faithful consistency scoring.
+
+    Subclasses override only the hooks they need. All hooks are traced inside
+    the jitted train step, so they must be pure and shape-stable; anything
+    data-dependent goes through `state` (a `GuidedState`, whose `extra` field
+    belongs to the strategy).
+    """
+
+    name = "none"
+
+    def __init__(self, gcfg: G.GuidedConfig):
+        self.gcfg = gcfg
+
+    # ------------------------------------------------------------- lifecycle
+    def init(self, params, n_workers: int):
+        """Initial strategy-owned state, stored in GuidedState.extra."""
+        return ()
+
+    # ---------------------------------------------------------------- hooks
+    def correction_weights(self, state: G.GuidedState, c: int):
+        """(c,) weights for the consistency-weighted loss term of THIS step's
+        backward pass (zero except at window end for fused guided replay)."""
+        return jnp.zeros((c,), jnp.float32)
+
+    def compensate_grads(self, grads, params, state: G.GuidedState):
+        """Adjust freshly computed gradients (e.g. staleness Taylor terms)."""
+        return grads
+
+    def correct(self, params, state: G.GuidedState, lr, weighted_grad_fn: Callable):
+        """Post-optimizer-step parameter correction. `weighted_grad_fn(p, w)`
+        returns the gradient of the w-weighted per-worker loss at p."""
+        return params
+
+    def score(self, state: G.GuidedState, worker_loss, avg_loss):
+        """New accumulated consistency scores (pre window-reset)."""
+        return G.update_scores(state, self.gcfg, worker_loss, avg_loss)
+
+    def update_extra(self, state: G.GuidedState, grads):
+        """Next value of the strategy-owned extra state."""
+        return state.extra
+
+
+def _fused_weights(state: G.GuidedState, gcfg: G.GuidedConfig, c: int):
+    """(c,) top-k consistency weights at window end, zeros otherwise."""
+    return jnp.where(
+        G.is_window_end(state.step, gcfg),
+        G.correction_weights(state.score, gcfg),
+        jnp.zeros((c,), jnp.float32),
+    )
+
+
+def _two_pass_correct(params, state: G.GuidedState, gcfg: G.GuidedConfig, lr,
+                      weighted_grad_fn):
+    """The paper's literal Fig. 7 second sequential update at window end."""
+
+    def replay(p):
+        w = G.correction_weights(state.score, gcfg)
+        g2 = weighted_grad_fn(p, w)
+        return jax.tree.map(lambda pi, gi: pi - lr * gi.astype(pi.dtype), p, g2)
+
+    return jax.lax.cond(G.is_window_end(state.step, gcfg), replay, lambda p: p, params)
+
+
+class GuidedFused(DelayCompensator):
+    """The paper's guided replay, fused into the main backward pass:
+    grad(sum_i w_i L_i) = sum_i w_i g_i, so replaying the <=max_consistent
+    most consistent workers' gradients costs one weighted loss term — no
+    stored gradients, no extra collective (DESIGN.md §3). Selecting this
+    strategy by name is authoritative: it corrects regardless of the
+    GuidedConfig.guided/correction flags."""
+
+    name = "guided_fused"
+
+    def correction_weights(self, state: G.GuidedState, c: int):
+        return _fused_weights(state, self.gcfg, c)
+
+
+class GuidedTwoPass(DelayCompensator):
+    """The paper's literal Fig. 7 second sequential update: every rho steps,
+    a lax.cond'd second backward of the consistency-weighted loss at the
+    already-moved iterate. Like guided_fused, the name is authoritative."""
+
+    name = "guided_two_pass"
+
+    def correct(self, params, state: G.GuidedState, lr, weighted_grad_fn):
+        return _two_pass_correct(params, state, self.gcfg, lr, weighted_grad_fn)
+
+
+class DcAsgd(DelayCompensator):
+    """DC-ASGD (Zheng et al. 2017): g~ = g + lambda * g ⊙ g ⊙ (W_t - W_stale).
+    Pure Taylor compensation; no guided replay (see DcAsgdGuided)."""
+
+    name = "dc_asgd"
+
+    def compensate_grads(self, grads, params, state: G.GuidedState):
+        return G.compensate_dc_asgd(grads, params, state.w_stale, self.gcfg.dc_lambda)
+
+
+class DcAsgdGuided(DcAsgd):
+    """DC-ASGD composed with the paper's guided replay — the legacy
+    GuidedConfig(mode="dc_asgd", guided=True) combinations as one named
+    strategy. The replay flavour follows gcfg.correction ("fused" folds the
+    weights into the backward pass, "two_pass" runs the literal second
+    update), preserving every legacy combination bit-for-bit."""
+
+    name = "dc_asgd_guided"
+
+    def correction_weights(self, state: G.GuidedState, c: int):
+        if self.gcfg.correction != "fused":
+            return jnp.zeros((c,), jnp.float32)
+        return _fused_weights(state, self.gcfg, c)
+
+    def correct(self, params, state: G.GuidedState, lr, weighted_grad_fn):
+        if self.gcfg.correction != "two_pass":
+            return params
+        return _two_pass_correct(params, state, self.gcfg, lr, weighted_grad_fn)
+
+
+class GapAware(DelayCompensator):
+    """Gap-Aware staleness dampening (Barkai et al. 2019, arXiv:1909.10802):
+    each gradient coordinate is divided by 1 + |W_t - W_stale| / rms(g) — the
+    further the parameter has already moved since the gradient was computed,
+    the less that stale coordinate is trusted. Needs mode="asgd" (w_stale).
+
+    This is the ~30-line "new scheme as a plugin" exemplar: it was added
+    without touching the train step or `train/steps.py`.
+    """
+
+    name = "gap_aware"
+
+    def __init__(self, gcfg: G.GuidedConfig):
+        if not gcfg.needs_stale:
+            raise ValueError(
+                "gap_aware dampens by |W - w_stale| and needs stale weights: "
+                "use mode='asgd' (got mode=%r)" % (gcfg.mode,)
+            )
+        super().__init__(gcfg)
+
+    def compensate_grads(self, grads, params, state: G.GuidedState):
+        def one(g, p, ps):
+            g32 = g.astype(jnp.float32)
+            gap = jnp.abs(p.astype(jnp.float32) - ps.astype(jnp.float32))
+            rms = jnp.sqrt(jnp.mean(jnp.square(g32)) + 1e-12)
+            return (g32 / (1.0 + gap / jnp.maximum(rms, 1e-12))).astype(g.dtype)
+
+        return jax.tree.map(one, grads, params, state.w_stale)
+
+
+# ----------------------------------------------------------------- registry
+
+_REGISTRY: Dict[str, Type[DelayCompensator]] = {}
+
+
+def register_compensator(name: str):
+    """Class decorator: `@register_compensator("my_scheme")` makes the scheme
+    selectable by name from ExperimentSpec / the train CLI."""
+
+    def deco(cls: Type[DelayCompensator]):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+for _cls in (DelayCompensator, GuidedFused, GuidedTwoPass, DcAsgd, DcAsgdGuided, GapAware):
+    _REGISTRY[_cls.name] = _cls
+
+
+def compensator_names() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_compensator(name: str, gcfg: G.GuidedConfig) -> DelayCompensator:
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown delay-compensation strategy {name!r}; "
+            f"registered: {', '.join(compensator_names())}"
+        ) from None
+    return cls(gcfg)
+
+
+def strategy_name_for(gcfg: G.GuidedConfig) -> str:
+    """Legacy GuidedConfig -> registry name (the shim `train.steps` uses)."""
+    if gcfg.mode == "dc_asgd":
+        return "dc_asgd_guided" if gcfg.guided else "dc_asgd"
+    if gcfg.guided:
+        return "guided_two_pass" if gcfg.correction == "two_pass" else "guided_fused"
+    return "none"

@@ -1,0 +1,188 @@
+"""`Trainer` — one facade over both backends, `Report` — one result type.
+
+    spec = ExperimentSpec(backend="sim", mode="ssgd", strategy="guided_fused")
+    report = Trainer.from_spec(spec).fit((Xtr, ytr, n_classes, Xte, yte))
+    report.test_accuracy, report.history
+
+    spec = ExperimentSpec(backend="mesh", arch="yi_9b", strategy="guided_fused")
+    report = Trainer.from_spec(spec).fit()          # synthetic LM stream
+    report.final_loss, report.history
+
+The mesh path jits the strategy-driven step from `repro.engine.mesh` and is
+numerically identical, step for step, to the legacy
+`train.steps.build_train_step` loop (tests/test_engine.py locks this in).
+The sim path drives the literal numpy parameter server. Either way the caller
+never touches `PSConfig`, `GuidedConfig`, `train_ps` or `build_train_step`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable, Optional
+
+from repro.engine.spec import ExperimentSpec
+
+
+@dataclasses.dataclass
+class Report:
+    """Common result of a Trainer.fit run on either backend.
+
+    history: per-step dicts on the mesh backend ({step, loss, worker_var,
+    corr_w}); per-arrival (t, avg_err) pairs on the sim backend.
+    """
+
+    backend: str
+    spec: ExperimentSpec
+    history: list
+    final: dict
+    model: Any = None          # sim: LogisticRegression; mesh: params pytree
+    state: Any = None          # mesh: final GuidedState
+
+    @property
+    def final_loss(self) -> Optional[float]:
+        if self.backend == "mesh":
+            return self.final.get("loss")
+        return self.final.get("train_loss")
+
+    @property
+    def val_loss(self) -> Optional[float]:
+        return self.final.get("val_loss")
+
+    @property
+    def test_accuracy(self) -> Optional[float]:
+        return self.final.get("test_accuracy")
+
+
+class Trainer:
+    """Facade dispatching an ExperimentSpec to its backend.
+
+    Construction is cheap and side-effect free; model init / jit / data
+    loading happen inside fit(). `trainer.strategy` is the resolved
+    DelayCompensator instance (mesh backend).
+    """
+
+    def __init__(self, spec: ExperimentSpec):
+        self.spec = spec
+        self.strategy = None
+        if spec.backend == "mesh":
+            from repro.engine.mesh import resolve_strategy
+
+            # resolve eagerly so unknown names fail at from_spec, not mid-fit
+            self.strategy = resolve_strategy(spec.to_guided_config(), spec.strategy)
+        else:
+            spec.to_ps_config()  # validates mode/strategy for the simulator
+
+    @classmethod
+    def from_spec(cls, spec: ExperimentSpec) -> "Trainer":
+        return cls(spec)
+
+    # ------------------------------------------------------------------ fit
+    def fit(self, data=None, steps: Optional[int] = None,
+            on_step: Optional[Callable] = None, keep_history: bool = True) -> Report:
+        """Run the experiment.
+
+        sim backend: `data` is (X, y, n_classes[, Xtest, ytest]).
+        mesh backend: `data` is an iterable of batch dicts (or None for the
+        synthetic LM stream); `steps` overrides spec.steps; `on_step(step,
+        metrics, params)` fires after every step with the RAW device metrics
+        dict (loss, worker_loss_var, corr_weight_sum, lr, step) — reading a
+        value forces a host sync, so cheap callbacks only touch them on their
+        own logging cadence. The `params` handed to on_step are donated to the
+        next step's jit call — read or save them synchronously inside the
+        callback; retaining them across steps raises "Array has been deleted".
+        Report.history is materialized after the loop so the hot path never
+        blocks on device->host transfers; long launcher runs that keep their
+        own log-step records pass keep_history=False to retain (and sync)
+        only the final step.
+        """
+        if self.spec.backend == "sim":
+            if steps is not None or on_step is not None:
+                raise ValueError(
+                    "steps/on_step apply to the mesh backend; the sim runs "
+                    "the paper's epoch protocol (set spec.epochs instead)"
+                )
+            return self._fit_sim(data)
+        return self._fit_mesh(data, steps, on_step, keep_history)
+
+    def _fit_sim(self, data) -> Report:
+        from repro.core.parameter_server import train_ps
+
+        if data is None:
+            raise ValueError("sim backend needs data=(X, y, n_classes[, Xtest, ytest])")
+        X, y, n_classes, *rest = data
+        Xtest, ytest = (rest + [None, None])[:2]
+        res = train_ps(X, y, n_classes, self.spec.to_ps_config(), Xtest, ytest)
+        final = {k: res[k] for k in ("train_loss", "val_loss", "test_accuracy") if k in res}
+        return Report(backend="sim", spec=self.spec, history=res["history"],
+                      final=final, model=res["model"])
+
+    def _fit_mesh(self, data, steps, on_step, keep_history=True) -> Report:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.engine import mesh as M
+        from repro.optim import constant, cosine, get_optimizer, wsd
+
+        spec = self.spec
+        n_steps = steps or spec.steps
+        cfg = spec.model_config()
+        ctx = M.build_ctx(spec.mesh)
+        gcfg = spec.to_guided_config()
+        opt = get_optimizer(spec.optimizer)
+        if spec.schedule == "constant":
+            lr = constant(spec.lr)
+        elif spec.schedule == "wsd":
+            lr = wsd(spec.lr, spec.warmup, n_steps // 2, n_steps // 2)
+        elif spec.schedule == "cosine":
+            lr = cosine(spec.lr, spec.warmup, n_steps)
+        else:
+            raise ValueError(spec.schedule)
+
+        c = spec.workers or max(ctx.n_workers, 1)
+        assert spec.global_batch % c == 0, (spec.global_batch, c)
+        key = jax.random.PRNGKey(spec.seed)
+        params, logical, gstate = M.init_train_state(
+            key, cfg, gcfg, opt, n_workers=c, strategy=self.strategy
+        )
+        step_fn = M.build_train_step(cfg, gcfg, opt, ctx, lr, n_micro=spec.micro,
+                                     n_workers=c, strategy=self.strategy)
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        batches = iter(data) if data is not None else self._synthetic_batches(cfg, c)
+
+        raw = []
+        m = None
+        for step in range(n_steps):
+            batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+            params, gstate, m = step_fn(params, gstate, batch)
+            if keep_history:
+                raw.append((step, m))
+            if on_step is not None:
+                on_step(step, m, params)
+        if not keep_history and m is not None:
+            raw = [(n_steps - 1, m)]
+        history = [
+            {"step": step, "loss": float(mi["loss"]),
+             "worker_var": float(mi["worker_loss_var"]),
+             "corr_w": float(mi["corr_weight_sum"])}
+            for step, mi in raw
+        ]
+        final = dict(history[-1]) if history else {}
+        return Report(backend="mesh", spec=self.spec, history=history, final=final,
+                      model=params, state=gstate)
+
+    def _synthetic_batches(self, cfg, c: int):
+        from repro.data import make_batch_for, synthetic_lm_batches
+
+        spec = self.spec
+        if cfg.audio_frontend or cfg.arch_type == "vlm":
+            def gen():
+                i = 0
+                while True:
+                    yield make_batch_for(cfg, spec.seq_len, spec.global_batch,
+                                         seed=spec.seed + i)
+                    i += 1
+
+            return gen()
+        return synthetic_lm_batches(cfg.vocab_size, spec.seq_len, spec.global_batch,
+                                    seed=spec.seed, n_corpora=c)

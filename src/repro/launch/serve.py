@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.train import build_ctx
+from repro.engine import build_ctx  # shared mesh-kind -> ShardCtx resolution
 from repro.models import transformer as T
 from repro.models.module import split_params
 from repro.data import make_batch_for

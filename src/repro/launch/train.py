@@ -1,13 +1,17 @@
-"""Training launcher.
+"""Training launcher over the unified engine API.
 
-Runs any assigned architecture (full or --reduced) with the guided delay-
-compensated data-parallel optimizer. On this CPU host the practical entry
-points are the reduced configs (examples/, smoke tests); on a real TPU slice
-the same driver runs the production mesh via --mesh prod / prod-multipod.
+Runs any assigned architecture (full or --reduced) with a pluggable
+delay-compensation strategy (repro.engine.strategies registry). On this CPU
+host the practical entry points are the reduced configs (examples/, smoke
+tests); on a real TPU slice the same driver runs the production mesh via
+--mesh prod / prod-multipod.
 
 Example:
   PYTHONPATH=src python -m repro.launch.train --arch yi-9b --reduced \
-      --steps 200 --mode ssgd --guided --rho 10 --log-every 10
+      --steps 200 --mode ssgd --strategy guided_fused --rho 10 --log-every 10
+
+Any strategy registered with @register_compensator is selectable here by name
+without touching this file or the train step.
 """
 from __future__ import annotations
 
@@ -15,32 +19,46 @@ import argparse
 import json
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.checkpoint import save
-from repro.configs import get_config
-from repro.core.guided import GuidedConfig
-from repro.data import synthetic_lm_batches, make_batch_for
-from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.optim import constant, get_optimizer, wsd
-from repro.sharding.rules import DEFAULT_RULES, MULTIPOD_RULES, LOCAL_CTX, ShardCtx
-from repro.train import steps as S
+from repro.engine import ExperimentSpec, Trainer, build_ctx, compensator_names  # noqa: F401
+
+# build_ctx re-exported for back-compat (serve and older scripts imported it here)
 
 
-def build_ctx(mesh_kind: str) -> ShardCtx:
-    if mesh_kind == "local":
-        return LOCAL_CTX
-    if mesh_kind == "host":
-        mesh = make_host_mesh(data=len(jax.devices()), model=1)
-        return ShardCtx(mesh=mesh, rules=DEFAULT_RULES)
-    if mesh_kind == "prod":
-        return ShardCtx(mesh=make_production_mesh(), rules=DEFAULT_RULES)
-    if mesh_kind == "prod-multipod":
-        return ShardCtx(mesh=make_production_mesh(multi_pod=True), rules=MULTIPOD_RULES,
-                        data_axes=("pod", "data"))
-    raise ValueError(mesh_kind)
+def spec_from_args(args) -> ExperimentSpec:
+    strategy = args.strategy
+    mode = args.mode
+    if mode == "dc_asgd":  # legacy spelling: execution mode asgd + Taylor strategy
+        mode = "asgd"
+        strategy = strategy or ("dc_asgd_guided" if args.guided else "dc_asgd")
+    if not strategy:
+        strategy = "guided_fused" if args.guided else "none"
+    overrides = []
+    if args.layers:
+        overrides.append(("n_layers", args.layers))
+    if args.d_model:
+        overrides.append(("d_model", args.d_model))
+    if args.d_ff:
+        overrides.append(("d_ff", args.d_ff))
+    return ExperimentSpec(
+        backend="mesh",
+        arch=args.arch,
+        reduced=args.reduced,
+        model_overrides=tuple(overrides),
+        mode=mode,
+        strategy=strategy,
+        rho=args.rho,
+        optimizer=args.optimizer,
+        lr=args.lr,
+        schedule=args.schedule,
+        steps=args.steps,
+        seq_len=args.seq,
+        global_batch=args.batch,
+        mesh=args.mesh,
+        workers=args.workers,
+        micro=args.micro,
+        seed=args.seed,
+    )
 
 
 def main(argv=None):
@@ -54,7 +72,10 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--mode", default="ssgd", choices=["seq", "ssgd", "asgd", "dc_asgd"])
-    ap.add_argument("--guided", action="store_true")
+    ap.add_argument("--guided", action="store_true",
+                    help="shorthand for --strategy guided_fused")
+    ap.add_argument("--strategy", default="",
+                    help=f"delay-compensation strategy; registered: {', '.join(compensator_names())}")
     ap.add_argument("--rho", type=int, default=10)
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--lr", type=float, default=0.05)
@@ -69,60 +90,30 @@ def main(argv=None):
     ap.add_argument("--metrics-out", default="")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    if args.layers:
-        cfg = cfg.replace(n_layers=args.layers)
-    if args.d_model:
-        cfg = cfg.replace(d_model=args.d_model)
-    if args.d_ff:
-        cfg = cfg.replace(d_ff=args.d_ff)
-
-    ctx = build_ctx(args.mesh)
-    gcfg = GuidedConfig(mode=args.mode, guided=args.guided, rho=args.rho)
-    opt = get_optimizer(args.optimizer)
-    lr = constant(args.lr) if args.schedule == "constant" else wsd(args.lr, 10, args.steps // 2, args.steps // 2)
-
-    # logical worker count: on a local mesh the paper's c is emulated by
-    # slicing the batch into c chunks (n_workers), matching the SPMD layout
-    c = args.workers or max(ctx.n_workers, 1)
-    assert args.batch % c == 0, (args.batch, c)
-    ctx_workers = ctx if ctx.distributed else ShardCtx(mesh=None)
-    key = jax.random.PRNGKey(args.seed)
-    params, logical, gstate = S.make_train_state(key, cfg, gcfg, opt, n_workers=c)
-
-    step_fn = S.build_train_step(cfg, gcfg, opt, ctx, lr, n_micro=args.micro, n_workers=c)
-    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
-
-    if cfg.audio_frontend or cfg.arch_type == "vlm":
-        def _gen():
-            i = 0
-            while True:
-                yield make_batch_for(cfg, args.seq, args.batch, seed=args.seed + i)
-                i += 1
-
-        batches = _gen()
-    else:
-        batches = synthetic_lm_batches(cfg.vocab_size, args.seq, args.batch, seed=args.seed, n_corpora=c)
+    spec = spec_from_args(args)
+    trainer = Trainer.from_spec(spec)
 
     history = []
     t0 = time.time()
-    for step in range(args.steps):
-        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
-        params, gstate, m = step_fn(params, gstate, batch)
+
+    def on_step(step, m, params):
+        # m holds raw device scalars; only force the host sync on log steps
         if step % args.log_every == 0 or step == args.steps - 1:
-            loss = float(m["loss"])
-            history.append({"step": step, "loss": loss,
-                            "worker_var": float(m["worker_loss_var"]),
-                            "corr_w": float(m["corr_weight_sum"])})
-            print(f"step {step:5d} loss {loss:.4f} worker_var {history[-1]['worker_var']:.2e} "
-                  f"corr_w {history[-1]['corr_w']:.2f} ({time.time()-t0:.1f}s)")
+            rec = {"step": step, "loss": float(m["loss"]),
+                   "worker_var": float(m["worker_loss_var"]),
+                   "corr_w": float(m["corr_weight_sum"])}
+            history.append(rec)
+            print(f"step {step:5d} loss {rec['loss']:.4f} worker_var {rec['worker_var']:.2e} "
+                  f"corr_w {rec['corr_w']:.2f} ({time.time()-t0:.1f}s)")
         if args.ckpt_every and args.ckpt_dir and step and step % args.ckpt_every == 0:
             save(args.ckpt_dir, step, {"params": params})
             print(f"checkpointed step {step}")
+
+    # the launcher keeps its own log-step history; don't retain per-step metrics
+    report = trainer.fit(on_step=on_step, keep_history=False)
+
     if args.ckpt_dir:
-        save(args.ckpt_dir, args.steps, {"params": params})
+        save(args.ckpt_dir, args.steps, {"params": report.model})
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(history, f, indent=1)

@@ -51,10 +51,27 @@ def capacity(n_tokens: int, n_experts: int, topk: int, factor: float) -> int:
     return max(4, min(c, n_tokens))
 
 
+def _topk_by_argmax(probs, k: int):
+    """top-k as k masked argmaxes (same values/order/tie-breaks as lax.top_k
+    for small k). lax.TopK crashes the partial-manual SPMD partitioner of the
+    pinned jax/XLA inside shard_map regions ("Check failed: IsManualSubgroup"),
+    while argmax lowers to plain reduces that partition fine."""
+    E = probs.shape[-1]
+    masked = probs
+    vals, idxs = [], []
+    for _ in range(k):
+        i = jnp.argmax(masked, axis=-1)
+        onehot = jax.nn.one_hot(i, E, dtype=jnp.bool_)
+        vals.append(jnp.sum(jnp.where(onehot, probs, 0.0), axis=-1))
+        idxs.append(i.astype(jnp.int32))
+        masked = jnp.where(onehot, -jnp.inf, masked)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
 def route(gates_logits, topk: int):
     """Returns (weights (N,k), expert_ids (N,k), probs (N,E))."""
     probs = jax.nn.softmax(gates_logits.astype(jnp.float32), axis=-1)
-    w, eid = jax.lax.top_k(probs, topk)
+    w, eid = _topk_by_argmax(probs, topk)
     w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
     return w, eid, probs
 
@@ -201,7 +218,9 @@ def moe_apply(p, x, cfg, ctx, capacity_factor=None):
         p_specs["wi"] = P(batch_axes, None, None, ctx.model_axis)
         p_specs["wo"] = P(batch_axes, ctx.model_axis, None)
 
-    fn = jax.shard_map(
+    from repro.common.compat import shard_map
+
+    fn = shard_map(
         local_psum,
         mesh=ctx.mesh,
         in_specs=(p_specs, P(*batch_spec, None, None)),

@@ -202,20 +202,21 @@ def sharded_decode_attention(q, k_cache, v_cache, cache_len, cfg, ctx: ShardCtx)
     s_c = k_cache.shape[1]
     if s_c % ctx.mesh.shape[axis] != 0:
         return L.decode_attention(q, k_cache, v_cache, cache_len, n_kv_heads=K, impl=cfg.attn_impl)
-    chunk = s_c // ctx.mesh.shape[axis]
 
-    def local(q_, kc, vc, clen):
+    def local(q_, kc, vc, clen, slots):
+        # slots: (s_c / n_model,) — this shard's global cache positions. Passed
+        # in as a sequence-sharded operand rather than derived from
+        # lax.axis_index: PartitionId doesn't lower through partial-manual
+        # SPMD on the pinned XLA.
         B, _, H, dh = q_.shape
         G = H // K
         scale = 1.0 / np.sqrt(dh)
-        idx = jax.lax.axis_index(axis)
         # f32 dots off-TPU: XLA CPU miscompiles bf16 dots inside manual-axes
         # shard_map regions (see models/moe.py note); bf16 MXU path on TPU.
         ed = jnp.float32 if jax.default_backend() != "tpu" else q_.dtype
         qg = q_.reshape(B, K, G, dh).astype(ed)
         logits = jnp.einsum("bkgd,bskd->bkgs", qg, kc.astype(ed),
                             preferred_element_type=jnp.float32) * scale
-        slots = idx * chunk + jnp.arange(chunk)
         valid = slots[None] < jnp.minimum(clen, s_c)[:, None]
         logits = jnp.where(valid[:, None, None, :], logits, L.NEG_INF)
         m_loc = jnp.max(logits, axis=-1)
@@ -228,14 +229,16 @@ def sharded_decode_attention(q, k_cache, v_cache, cache_len, cfg, ctx: ShardCtx)
 
     from jax.sharding import PartitionSpec as P
 
-    fn = jax.shard_map(
+    from repro.common.compat import shard_map
+
+    fn = shard_map(
         local,
         mesh=ctx.mesh,
-        in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None), P()),
+        in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None), P(), P(axis)),
         out_specs=P(),
         axis_names={axis},
     )
-    return fn(q, k_cache, v_cache, cache_len)
+    return fn(q, k_cache, v_cache, cache_len, jnp.arange(s_c, dtype=jnp.int32))
 
 
 # ------------------------------------------------------------- block apply
@@ -271,6 +274,10 @@ def layer_apply(lp, x, cfg, ctx, i, positions, cache=None, t=None):
                 vs_cache = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
                 k_full = dequantize_kv(k_cache, ks_cache, cfg.dtype)
                 v_full = dequantize_kv(v_cache, vs_cache, cfg.dtype)
+                # this step's attention reads the current token's exact k/v
+                # (the int8 copy only pays its quantization cost from t+1 on)
+                k_full = jax.lax.dynamic_update_slice(k_full, k.astype(cfg.dtype), (0, slot, 0, 0))
+                v_full = jax.lax.dynamic_update_slice(v_full, v.astype(cfg.dtype), (0, slot, 0, 0))
                 new_cache = {"k": k_cache, "v": v_cache, "k_scale": ks_cache, "v_scale": vs_cache}
             else:
                 k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))

@@ -1,29 +1,22 @@
 """jit-able train / prefill / decode steps with guided delay compensation.
 
-The train step is where the paper's technique meets the mesh:
-
-  * per-worker losses E_i come free from the per-example loss vector (each data
-    shard of the batch is one of the paper's c workers);
-  * the guided correction enters the SAME backward pass as a consistency-
-    weighted loss term (grad(sum w_i L_i) = sum w_i g_i) — zero extra
-    collectives, zero stored gradients ("fused" mode, DESIGN.md §3);
-  * "two_pass" mode reproduces the paper's literal second sequential update
-    with a lax.cond'd second backward every rho steps;
-  * ASGD staleness and DC-ASGD compensation are handled through gstate.w_stale.
+The train-step implementation now lives in `repro.engine.mesh`, driven by the
+pluggable `DelayCompensator` strategies of `repro.engine.strategies`
+(DESIGN.md §2-3). `build_train_step` / `make_train_state` here are kept as
+thin deprecated shims over that engine — new code should go through
+`repro.engine.Trainer` / `repro.engine.build_train_step` directly. The
+serve-side prefill/decode step builders and the sharding-tree helpers remain
+canonical in this module.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.common import tree_add
 from repro.core import guided as G
 from repro.models import transformer as T
-from repro.models.module import split_params, value_tree
 from repro.optim import Optimizer
 from repro.sharding.rules import ShardCtx, logical_to_spec
 
@@ -69,8 +62,11 @@ def _prod(it):
     return out
 
 
-def state_shardings(gcfg: G.GuidedConfig, opt: Optimizer, p_shardings, mesh):
-    """GuidedState sharding tree mirroring guided_init's structure."""
+def state_shardings(gcfg: G.GuidedConfig, opt: Optimizer, p_shardings, mesh,
+                    extra_shardings=()):
+    """GuidedState sharding tree mirroring guided_init's structure.
+    `extra_shardings` must mirror the active strategy's init() output
+    (the built-in strategies keep it empty; replicate scalars with P())."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     repl = NamedSharding(mesh, P())
@@ -88,6 +84,7 @@ def state_shardings(gcfg: G.GuidedConfig, opt: Optimizer, p_shardings, mesh):
         prev_avg_loss=repl,
         w_stale=p_shardings if gcfg.needs_stale else (),
         opt_state=opt_map[opt.name],
+        extra=extra_shardings,
     )
 
 
@@ -107,109 +104,22 @@ def cache_shardings(cfg, ctx: ShardCtx, cache_struct):
 
 
 def make_train_state(key, cfg, gcfg: G.GuidedConfig, opt: Optimizer, n_workers: int):
-    boxed = T.model_init(key, cfg)
-    params, logical = split_params(boxed)
-    gstate = G.guided_init(gcfg, params, opt, n_workers)
-    return params, logical, gstate
+    """Deprecated shim over repro.engine.init_train_state (same signature)."""
+    from repro.engine import mesh as _engine
 
-
-def _microbatches(batch, n_micro: int, c: int):
-    """Split (B, ...) -> (n_micro, B/n_micro, ...) preserving the worker
-    (data-shard) structure: every microbatch contains an equal slice of every
-    worker's rows, so per-worker losses stay well-defined and no cross-shard
-    traffic is introduced (the leading c-blocking is untouched per shard)."""
-
-    def one(x):
-        B = x.shape[0]
-        b = B // c
-        xr = x.reshape(c, n_micro, b // n_micro, *x.shape[1:])
-        xr = jnp.moveaxis(xr, 1, 0)
-        return xr.reshape(n_micro, B // n_micro, *x.shape[1:])
-
-    return jax.tree.map(one, batch)
+    return _engine.init_train_state(key, cfg, gcfg, opt, n_workers)
 
 
 def build_train_step(cfg, gcfg: G.GuidedConfig, opt: Optimizer, ctx: ShardCtx, lr_schedule,
                      n_micro: int = 1, n_workers: int = 0):
-    """Returns train_step(params, gstate, batch) -> (params, gstate, metrics).
+    """Deprecated shim over repro.engine.build_train_step: derives the
+    DelayCompensator strategy the GuidedConfig flags imply and delegates.
+    New code should use repro.engine.Trainer / repro.engine.build_train_step,
+    which also accept a strategy by registry name or instance."""
+    from repro.engine import mesh as _engine
 
-    n_micro > 1 enables microbatched gradient accumulation: the remat-saved
-    per-layer activation stack scales with the microbatch, which is what lets
-    train_4k (global 256 x 4096) fit a 16 GiB chip at 9B-123B scale.
-    n_workers overrides the paper's worker count c (defaults to the number of
-    data shards; on a single device it emulates c workers by batch slicing)."""
-    c = n_workers or max(ctx.n_workers, 1)
-
-    def loss_fn(p, batch, corr_w):
-        per_ex, aux, _ = T.forward_train(p, batch, cfg, ctx)
-        B = per_ex.shape[0]
-        E_i = per_ex.reshape(c, B // c).mean(axis=1)
-        mean_loss = E_i.mean()
-        total = mean_loss + aux + (jax.lax.stop_gradient(corr_w) * E_i).sum() * gcfg.correction_scale
-        return total, (E_i, mean_loss)
-
-    def grads_and_losses(grad_at, batch, corr_w):
-        if n_micro == 1:
-            (_, (E_i, mean_loss)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                grad_at, batch, corr_w
-            )
-            return grads, E_i, mean_loss
-
-        mbs = _microbatches(batch, n_micro, c)
-
-        def body(acc, mb):
-            g_acc, e_acc, l_acc = acc
-            (_, (E_i, ml)), g = jax.value_and_grad(loss_fn, has_aux=True)(grad_at, mb, corr_w)
-            g_acc = jax.tree.map(lambda a, gi: a + gi.astype(jnp.float32), g_acc, g)
-            return (g_acc, e_acc + E_i, l_acc + ml), None
-
-        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), grad_at)
-        (g_sum, e_sum, l_sum), _ = jax.lax.scan(body, (g0, jnp.zeros((c,), jnp.float32), jnp.zeros((), jnp.float32)), mbs)
-        grads = jax.tree.map(lambda g, p: (g / n_micro).astype(p.dtype), g_sum, grad_at)
-        return grads, e_sum / n_micro, l_sum / n_micro
-
-    def train_step(params, gstate: G.GuidedState, batch):
-        # correction weights from scores accumulated over the window so far
-        window_end = G.is_window_end(gstate.step, gcfg)
-        corr_w = jnp.where(
-            window_end & jnp.asarray(gcfg.guided and gcfg.correction == "fused"),
-            G.correction_weights(gstate.score, gcfg),
-            jnp.zeros((c,), jnp.float32),
-        )
-
-        grad_at = gstate.w_stale if gcfg.needs_stale else params
-        grads, E_i, mean_loss = grads_and_losses(grad_at, batch, corr_w)
-        if gcfg.mode == "dc_asgd":
-            grads = G.compensate_dc_asgd(grads, params, gstate.w_stale, gcfg.dc_lambda)
-
-        lr = lr_schedule(gstate.step)
-        updates, opt_state = opt.update(grads, gstate.opt_state, params, lr * c if gcfg.mode != "seq" else lr)
-        params = tree_add(params, updates)
-
-        if gcfg.guided and gcfg.correction == "two_pass":
-            # the paper's literal second sequential update at the moved iterate
-            def replay(p):
-                w = G.correction_weights(gstate.score, gcfg)
-                # gradient of the weighted-consistent loss only (uniform term off)
-                (_, _), g2 = jax.value_and_grad(
-                    lambda q: (jax.lax.stop_gradient(0.0) + (w * T.forward_train(q, batch, cfg, ctx)[0].reshape(c, -1).mean(1)).sum(), 0.0),
-                    has_aux=True,
-                )(p)
-                return jax.tree.map(lambda pi, gi: pi - lr * gi.astype(pi.dtype), p, g2)
-
-            params = jax.lax.cond(window_end, replay, lambda p: p, params)
-
-        gstate = G.advance(gstate, gcfg, opt_state, params, E_i, mean_loss)
-        metrics = {
-            "loss": mean_loss,
-            "worker_loss_var": jnp.var(E_i),
-            "corr_weight_sum": jnp.sum(corr_w),
-            "lr": lr,
-            "step": gstate.step,
-        }
-        return params, gstate, metrics
-
-    return train_step
+    return _engine.build_train_step(cfg, gcfg, opt, ctx, lr_schedule,
+                                    n_micro=n_micro, n_workers=n_workers)
 
 
 # --------------------------------------------------------------- serve steps

@@ -1,0 +1,40 @@
+"""`hypothesis` imports, or skip-stubs when it isn't installed.
+
+The image doesn't ship hypothesis; importing it at module top used to break
+collection of four whole test modules, hiding every plain test they contain.
+Importing `given / settings / st` from here keeps those modules collectable:
+with hypothesis present the real objects pass straight through; without it the
+property-based tests collect as individually-skipped stubs and the plain tests
+keep running.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub(*a, **k):  # pragma: no cover
+                pass
+
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Attribute access yields inert strategy factories (never executed)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

@@ -1,7 +1,7 @@
 """Data pipeline tests: UCI analogs, IQR filter, token stream."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st  # hypothesis, or skip-stubs when absent
 
 from repro.data import DATASETS, iqr_filter, load_dataset, train_test_split
 from repro.data.tokens import synthetic_lm_batches, make_batch_for

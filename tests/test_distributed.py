@@ -18,6 +18,7 @@ SCRIPT = textwrap.dedent(
     """
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"  # skip the 60s+ TPU-probe stall
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs import get_config
@@ -26,8 +27,8 @@ SCRIPT = textwrap.dedent(
     from repro.models.module import split_params
     from repro.sharding.rules import ShardCtx, DEFAULT_RULES, LOCAL_CTX
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.common.compat import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
 
     # ---------------- MoE: local vs gather vs all-to-all ----------------
     cfg = get_config("qwen3_moe_235b_a22b").reduced()  # 4 experts top-2

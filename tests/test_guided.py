@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypcompat import given, settings, st  # hypothesis, or skip-stubs when absent
 
 from repro.core import guided as G
 from repro.core.consistency import consistency_increment

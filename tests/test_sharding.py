@@ -2,7 +2,7 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st  # hypothesis, or skip-stubs when absent
 from jax.sharding import PartitionSpec as P
 
 from repro.sharding.rules import (
