@@ -13,7 +13,7 @@ from repro.engine import ExperimentSpec, Trainer
 KS = [0, 1, 2, 4, 8, 10]
 
 
-def sweep(dataset="pima", runs=10, epochs=50):
+def sweep(dataset="pima", runs=10, epochs=50, backend="scan"):
     X, y, kcls = load_dataset(dataset, seed=0)
     out = {}
     for k in KS:
@@ -21,7 +21,7 @@ def sweep(dataset="pima", runs=10, epochs=50):
         for run in range(runs):
             Xtr, ytr, Xte, yte = train_test_split(X, y, seed=run)
             spec = ExperimentSpec(
-                backend="sim", mode="ssgd",
+                backend=backend, mode="ssgd",
                 strategy="guided_fused" if k > 0 else "none",
                 rho=10, epochs=epochs, seed=run, max_consistent=max(k, 1))
             report = Trainer.from_spec(spec).fit((Xtr, ytr, kcls, Xte, yte))
@@ -32,8 +32,9 @@ def sweep(dataset="pima", runs=10, epochs=50):
     return out
 
 
-def main(runs=10, epochs=50):
-    results = {ds: sweep(ds, runs, epochs) for ds in ("pima", "liver_filtered")}
+def main(runs=10, epochs=50, backend="scan"):
+    results = {ds: sweep(ds, runs, epochs, backend=backend)
+               for ds in ("pima", "liver_filtered")}
     import os
 
     os.makedirs("results", exist_ok=True)
@@ -43,4 +44,11 @@ def main(runs=10, epochs=50):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="scan", choices=["scan", "sim"])
+    ap.add_argument("--runs", type=int, default=10)
+    ap.add_argument("--epochs", type=int, default=50)
+    args = ap.parse_args()
+    main(args.runs, args.epochs, backend=args.backend)

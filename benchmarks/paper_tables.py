@@ -57,14 +57,16 @@ def tolerance(vals) -> float:
     return (q3 - q1) / 2
 
 
-def run_dataset(name: str, algos, runs: int = 30, epochs: int = 50, rho: int = 10):
+def run_dataset(name: str, algos, runs: int = 30, epochs: int = 50, rho: int = 10,
+                backend: str = "scan"):
     X, y, k = load_dataset(name, seed=0)
     out = {}
     for algo in algos:
         accs = []
         for run in range(runs):
             Xtr, ytr, Xte, yte = train_test_split(X, y, seed=run)
-            spec = ExperimentSpec.for_algo(algo, epochs=epochs, seed=run, rho=rho)
+            spec = ExperimentSpec.for_algo(algo, epochs=epochs, seed=run, rho=rho,
+                                           backend=backend)
             report = Trainer.from_spec(spec).fit((Xtr, ytr, k, Xte, yte))
             accs.append(report.test_accuracy * 100)
         out[algo] = accs
@@ -87,13 +89,13 @@ def summarize(per_algo: dict, pairs) -> dict:
 
 
 def tables(which: str = "canonical", runs: int = 30, epochs: int = 50,
-           datasets=None, verbose=True) -> dict:
+           datasets=None, verbose=True, backend: str = "scan") -> dict:
     algos = CANONICAL if which == "canonical" else VARIANTS
     pairs = ([("SGD", "gSGD"), ("SSGD", "gSSGD"), ("ASGD", "gASGD")] if which == "canonical"
              else [("SSGD", "gSSGD"), ("SRMSprop", "gSRMSprop"), ("SAdagrad", "gSAdagrad")])
     results = {}
     for ds in datasets or DATASETS:
-        per_algo = run_dataset(ds, algos, runs=runs, epochs=epochs)
+        per_algo = run_dataset(ds, algos, runs=runs, epochs=epochs, backend=backend)
         results[ds] = summarize(per_algo, pairs)
         if verbose:
             row = " ".join(f"{a}={results[ds][a]['avg']:5.1f}±{results[ds][a]['tol']:3.1f}"
@@ -102,13 +104,15 @@ def tables(which: str = "canonical", runs: int = 30, epochs: int = 50,
     return results
 
 
-def main(runs=30, epochs=50, out_path="results/paper_tables.json", datasets=None):
-    print("[paper_tables] canonical algorithms (Tables 2-3 analog)")
-    canonical = tables("canonical", runs, epochs, datasets)
+def main(runs=30, epochs=50, out_path="results/paper_tables.json", datasets=None,
+         backend="scan"):
+    print(f"[paper_tables] canonical algorithms (Tables 2-3 analog, backend={backend})")
+    canonical = tables("canonical", runs, epochs, datasets, backend=backend)
     print("[paper_tables] RMSprop/Adagrad variants (Tables 4-5 analog)")
-    variants = tables("variants", runs, epochs, datasets)
+    variants = tables("variants", runs, epochs, datasets, backend=backend)
     out = {"canonical": canonical, "variants": variants,
-           "protocol": {"runs": runs, "epochs": epochs, "lr": 0.2, "rho": 10}}
+           "protocol": {"runs": runs, "epochs": epochs, "lr": 0.2, "rho": 10,
+                        "backend": backend}}
     import os
 
     os.makedirs("results", exist_ok=True)
@@ -124,6 +128,9 @@ if __name__ == "__main__":
     ap.add_argument("--runs", type=int, default=30)
     ap.add_argument("--epochs", type=int, default=50)
     ap.add_argument("--datasets", default="")
+    ap.add_argument("--backend", default="scan", choices=["scan", "sim"],
+                    help="scan = jitted lax.scan simulator; sim = numpy reference")
     args = ap.parse_args()
     main(args.runs, args.epochs,
-         datasets=args.datasets.split(",") if args.datasets else None)
+         datasets=args.datasets.split(",") if args.datasets else None,
+         backend=args.backend)

@@ -14,14 +14,15 @@ from repro.engine import ExperimentSpec, Trainer
 ALGOS = ["SGD", "gSGD", "SSGD", "gSSGD", "ASGD", "gASGD"]
 
 
-def progression(dataset="new_thyroid", runs: int = 5, epochs: int = 50, points: int = 40):
+def progression(dataset="new_thyroid", runs: int = 5, epochs: int = 50, points: int = 40,
+                backend: str = "scan"):
     X, y, k = load_dataset(dataset, seed=0)
     out = {}
     for algo in ALGOS:
         curves = []
         for run in range(runs):
             Xtr, ytr, Xte, yte = train_test_split(X, y, seed=run)
-            spec = ExperimentSpec.for_algo(algo, epochs=epochs, seed=run)
+            spec = ExperimentSpec.for_algo(algo, epochs=epochs, seed=run, backend=backend)
             report = Trainer.from_spec(spec).fit((Xtr, ytr, k, Xte, yte))
             t = np.array([h[0] for h in report.history], float)
             e = np.array([h[1] for h in report.history], float)
@@ -35,8 +36,8 @@ def progression(dataset="new_thyroid", runs: int = 5, epochs: int = 50, points: 
     return out
 
 
-def main(runs=5, epochs=50):
-    results = progression(runs=runs, epochs=epochs)
+def main(runs=5, epochs=50, backend="scan"):
+    results = progression(runs=runs, epochs=epochs, backend=backend)
     import os
 
     os.makedirs("results", exist_ok=True)
@@ -46,4 +47,11 @@ def main(runs=5, epochs=50):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="scan", choices=["scan", "sim"])
+    ap.add_argument("--runs", type=int, default=5)
+    ap.add_argument("--epochs", type=int, default=50)
+    args = ap.parse_args()
+    main(args.runs, args.epochs, backend=args.backend)

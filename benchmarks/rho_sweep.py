@@ -17,7 +17,8 @@ from repro.engine import ExperimentSpec, Trainer
 RHOS = [1, 2, 4, 10, 17, 25, 36]
 
 
-def sweep(dataset: str, runs: int = 10, epochs: int = 50, guided_both=True):
+def sweep(dataset: str, runs: int = 10, epochs: int = 50, guided_both=True,
+          backend: str = "scan"):
     X, y, k = load_dataset(dataset, seed=0)
     out = {}
     for rho in RHOS:
@@ -29,7 +30,7 @@ def sweep(dataset: str, runs: int = 10, epochs: int = 50, guided_both=True):
                 # batch_size 4 so even the largest rho has enough mini-batches
                 # per round on the small datasets (c = rho workers)
                 spec = ExperimentSpec(
-                    backend="sim", mode=mode,
+                    backend=backend, mode=mode,
                     strategy="guided_fused" if guided else "none",
                     rho=rho, epochs=epochs, seed=run, batch_size=4)
                 report = Trainer.from_spec(spec).fit((Xtr, ytr, k, Xte, yte))
@@ -41,8 +42,8 @@ def sweep(dataset: str, runs: int = 10, epochs: int = 50, guided_both=True):
     return out
 
 
-def main(runs=10, epochs=50, datasets=("liver_filtered", "pima")):
-    results = {ds: sweep(ds, runs, epochs) for ds in datasets}
+def main(runs=10, epochs=50, datasets=("liver_filtered", "pima"), backend="scan"):
+    results = {ds: sweep(ds, runs, epochs, backend=backend) for ds in datasets}
     import os
 
     os.makedirs("results", exist_ok=True)
@@ -52,4 +53,11 @@ def main(runs=10, epochs=50, datasets=("liver_filtered", "pima")):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="scan", choices=["scan", "sim"])
+    ap.add_argument("--runs", type=int, default=10)
+    ap.add_argument("--epochs", type=int, default=50)
+    args = ap.parse_args()
+    main(args.runs, args.epochs, backend=args.backend)

@@ -105,10 +105,82 @@ def bench_kernels():
         print(f"{name},{us:.1f},{derived}")
 
 
+def bench_delaysim(full: bool, out_path: str = "BENCH_delaysim.json"):
+    """paper_tables workload, scan backend vs the numpy reference loop.
+
+    The canonical algorithm set at the paper's protocol on one dataset: the
+    numpy event loop runs the N seeds sequentially (the only way it can); the
+    scan backend runs them as ONE vmapped jit call (n_seeds=N), which is the
+    execution model the backend exists for. Reports cold (includes jit
+    compile) and warm (steady-state, e.g. the next dataset at equal shapes)
+    wall times, steps/s and final losses per algorithm; the headline speedup
+    is warm. Everything lands machine-readable in BENCH_delaysim.json.
+    """
+    import json
+
+    from repro.core.parameter_server import algo_config, train_ps
+    from repro.data import load_dataset, train_test_split
+    from repro.engine import ExperimentSpec, Trainer
+
+    runs, epochs, dataset = (30, 50, "pima") if full else (8, 25, "pima")
+    algos = ["SGD", "gSGD", "SSGD", "gSSGD", "ASGD", "gASGD"]
+    X, y, k = load_dataset(dataset, seed=0)
+    Xtr, ytr, Xte, yte = train_test_split(X, y, seed=0)
+
+    out = {"protocol": {"dataset": dataset, "runs": runs, "epochs": epochs,
+                        "algos": algos}, "per_algo": {}}
+    tot_np = tot_cold = tot_warm = 0.0
+    for algo in algos:
+        t0 = time.perf_counter()
+        finals_np = []
+        for run in range(runs):
+            res = train_ps(Xtr, ytr, k, algo_config(algo, epochs=epochs, seed=run),
+                           Xte, yte)
+            finals_np.append(res["val_loss"])
+        t_np = time.perf_counter() - t0
+
+        spec = ExperimentSpec.for_algo(algo, epochs=epochs, seed=0, backend="scan",
+                                       n_seeds=runs)
+        rep = Trainer.from_spec(spec).fit((Xtr, ytr, k, Xte, yte))
+        t_cold = rep.wall_time_s
+        rep = Trainer.from_spec(spec).fit((Xtr, ytr, k, Xte, yte))
+        t_warm = rep.wall_time_s
+        finals_scan = np.asarray(rep.final["val_loss"])
+        tot_np += t_np
+        tot_cold += t_cold
+        tot_warm += t_warm
+        out["per_algo"][algo] = {
+            "numpy_wall_s": t_np,
+            "scan_wall_cold_s": t_cold,
+            "scan_wall_warm_s": t_warm,
+            "scan_steps_per_s": rep.steps_per_s,
+            "numpy_steps_per_s": len(rep.history) * runs / t_np,
+            "speedup_warm": t_np / t_warm,
+            "final_val_loss_numpy_mean": float(np.mean(finals_np)),
+            "final_val_loss_scan_mean": float(finals_scan.mean()),
+            "final_val_loss_max_abs_diff": float(
+                np.abs(finals_scan - np.asarray(finals_np)).max()),
+        }
+    out["total"] = {
+        "numpy_wall_s": tot_np,
+        "scan_wall_cold_s": tot_cold,
+        "scan_wall_warm_s": tot_warm,
+        "speedup_cold": tot_np / tot_cold,
+        "speedup_warm": tot_np / tot_warm,
+    }
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"delaysim_scan_vs_numpy,{tot_np * 1e6:.0f},"
+          f"speedup_warm={tot_np / tot_warm:.1f}x;speedup_cold={tot_np / tot_cold:.1f}x;"
+          f"algos={len(algos)};runs={runs};epochs={epochs}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper protocol (30x50)")
-    ap.add_argument("--only", default="", help="comma list: tables,variants,rho,progression,roofline,kernels,scale")
+    ap.add_argument("--only", default="",
+                    help="comma list: tables,variants,rho,progression,roofline,kernels,scale,delaysim")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -129,6 +201,8 @@ def main() -> None:
         bench_guided_at_scale(args.full)
     if want("kernels"):
         bench_kernels()
+    if want("delaysim"):
+        bench_delaysim(args.full)
 
 
 if __name__ == "__main__":

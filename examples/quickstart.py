@@ -7,6 +7,11 @@ Shows the three moving parts of the framework in ~30 lines:
   3. the Trainer facade running the jitted train step with per-worker
      consistency tracking.
 
+This demo uses the mesh (transformer) backend. The same spec vocabulary runs
+the paper-scale simulators: `backend="scan"` is the jitted delay simulator
+(multi-seed sweeps via `n_seeds`, delay topologies via `topology`; the
+benchmarks accept `--backend scan|sim`), `backend="sim"` the numpy reference.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 from repro.engine import ExperimentSpec, Trainer

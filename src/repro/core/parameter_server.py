@@ -17,8 +17,13 @@ regression on tabular data):
   * SRMSprop / SAdagrad — Fig. 11: the server-side update rule is swapped; the
             guided replay stays plain (exactly as printed in the paper).
 
-Pure numpy; deterministic given a seed. This module is what benchmarks/
-paper_tables.py drives to produce Tables 2-5 and Figs. 12-14.
+Pure numpy; deterministic given a seed. This loop is the PARITY REFERENCE for
+the jitted scan backend (repro.engine.delaysim): `extract_schedule` below
+replays its rng protocol recording a `DelaySchedule` (which batch arrives at
+each server step, how stale its gradient is) instead of training, and the
+scan backend reproduces the trajectory from that table to float64 round-off.
+benchmarks/paper_tables.py produces Tables 2-5 / Figs. 12-14 on either
+backend (`--backend scan|sim`).
 """
 from __future__ import annotations
 
@@ -64,6 +69,14 @@ class LogisticRegression:
 
     def accuracy(self, X, y) -> float:
         return float(np.mean(self.logits(X).argmax(axis=1) == y))
+
+    @classmethod
+    def from_weights(cls, W) -> "LogisticRegression":
+        """Wrap an externally trained weight matrix (e.g. the scan backend's
+        final W) so callers get the same loss/accuracy methods."""
+        model = object.__new__(cls)
+        model.W = np.asarray(W)
+        return model
 
 
 # ------------------------------------------------------------------- config
@@ -236,6 +249,137 @@ def train_ps(X, y, n_classes: int, cfg: PSConfig, Xtest=None, ytest=None):
     if Xtest is not None:
         out["test_accuracy"] = model.accuracy(Xtest, ytest)
     return out
+
+
+# ------------------------------------------------------- schedule extraction
+
+
+@dataclasses.dataclass(frozen=True)
+class DelaySchedule:
+    """Precomputed arrival table for one training run: what the parameter
+    server sees at every step, with the delay topology factored out of the
+    training loop.
+
+    Row t describes the t-th arrival (0-based server step): the mini-batch it
+    carries (`batch_rows[t]` — row indices into the training set) and the
+    staleness offset `staleness[t]` = s, meaning the gradient was computed at
+    W_{t-s}, the weights as they stood s server steps before the arrival was
+    applied. seq is all-zeros, ssgd is the sawtooth 0..c-1 per barrier round,
+    asgd comes out of the event-queue simulation with pre-sampled compute
+    times (any `delay_sampler` — exponential, constant, heavy-tail, ...).
+
+    The scan backend (repro.engine.delaysim) consumes this table with a ring
+    buffer of the last `max_staleness+1` weight states; the numpy event loop
+    above stays as the parity reference that defines these semantics.
+    """
+
+    batch_rows: np.ndarray   # (T, batch_size) int32, rows into the train set
+    staleness: np.ndarray    # (T,) int32, s_t: gradient computed at W_{t-s_t}
+    n_workers: int
+    topology: str = "exp"
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.staleness)
+
+    @property
+    def max_staleness(self) -> int:
+        return int(self.staleness.max(initial=0))
+
+
+def _event_schedule(n_batches: int, c: int, rng, delay_sampler, t0: int):
+    """One epoch of the ASGD event-queue simulation, gradient math elided.
+
+    Mirrors the `mode == "asgd"` branch of train_ps arrival-for-arrival: same
+    heap ordering, same rng draw order (one draw per dispatched batch, drawn
+    only after the batch iterator yields). Returns (order, fetch) — the batch
+    ids in arrival order and the global server step each gradient's weights
+    were fetched at. `t0` is the global step count before this epoch.
+    """
+    heap: list = []
+    it = iter(range(n_batches))
+    order, fetch = [], []
+    t = t0
+    for w in range(c):
+        bid = next(it, None)
+        if bid is None:
+            break
+        heapq.heappush(heap, (0.0 + delay_sampler(w, rng), w, bid, t0))
+    while heap:
+        t_arr, w, bid, f = heapq.heappop(heap)
+        order.append(bid)
+        fetch.append(f)
+        t += 1
+        nbid = next(it, None)
+        if nbid is not None:
+            heapq.heappush(heap, (t_arr + delay_sampler(w, rng), w, nbid, t))
+    return order, fetch
+
+
+def _exp_sampler(w: int, rng) -> float:
+    """train_ps's literal compute-time draw (keep the rng call identical)."""
+    return rng.exponential(1.0) + 0.1
+
+
+def extract_schedule(cfg: PSConfig, n_train: int, rng, delay_sampler=None,
+                     topology: str = "") -> DelaySchedule:
+    """Replay train_ps's per-epoch rng protocol, recording arrivals instead of
+    training: one `rng.permutation(n_train)` per epoch, then (asgd only) the
+    event-queue delay draws in the loop's exact order. Call with an rng in the
+    same state train_ps would have after the validation split and model init,
+    and the recorded schedule reproduces the reference run arrival-for-arrival.
+    """
+    c = cfg.n_workers
+    bs = cfg.batch_size
+    delay_sampler = delay_sampler or _exp_sampler
+    rows, stale = [], []
+    t = 0
+    for _epoch in range(cfg.epochs):
+        idx = rng.permutation(n_train)
+        nb = (n_train - bs) // bs + 1 if n_train >= bs else 0
+        epoch_rows = idx[: nb * bs].reshape(nb, bs)
+        if cfg.mode == "seq":
+            rows.extend(epoch_rows)
+            stale += [0] * nb
+            t += nb
+        elif cfg.mode == "ssgd":
+            for r0 in range(0, nb, c):
+                round_ = epoch_rows[r0:r0 + c]
+                rows.extend(round_)
+                stale += list(range(len(round_)))
+                t += len(round_)
+        elif cfg.mode == "asgd":
+            order, fetch = _event_schedule(nb, c, rng, delay_sampler, t)
+            rows += [epoch_rows[b] for b in order]
+            stale += [t + i - f for i, f in enumerate(fetch)]
+            t += len(order)
+        else:
+            raise ValueError(cfg.mode)
+    return DelaySchedule(
+        batch_rows=np.asarray(rows, np.int32),
+        staleness=np.asarray(stale, np.int32),
+        n_workers=c,
+        topology=topology or {"seq": "seq", "ssgd": "barrier"}.get(cfg.mode, "exp"),
+    )
+
+
+def prepare_run(X, y, n_classes: int, cfg: PSConfig, delay_sampler=None,
+                topology: str = ""):
+    """The data-and-schedule half of train_ps: same rng protocol (validation
+    split -> model init -> per-epoch permutations and delay draws), no
+    training. Returns (W0, (Xtr, ytr), (Xv, yv), DelaySchedule); feeding these
+    to any backend that honours DelaySchedule semantics reproduces the
+    train_ps trajectory exactly."""
+    rng = np.random.default_rng(cfg.seed)
+    n_val = max(8, int(cfg.verification_frac * len(X)))
+    vidx = rng.choice(len(X), n_val, replace=False)
+    mask = np.ones(len(X), bool)
+    mask[vidx] = False
+    Xtr, ytr = X[mask], y[mask]
+    Xv, yv = X[vidx], y[vidx]
+    W0 = 0.01 * rng.standard_normal((X.shape[1] + 1, n_classes))
+    schedule = extract_schedule(cfg, len(Xtr), rng, delay_sampler, topology)
+    return W0, (Xtr, ytr), (Xv, yv), schedule
 
 
 ALGO_NAMES = {

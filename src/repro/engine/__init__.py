@@ -1,10 +1,15 @@
-"""repro.engine — the unified Experiment/Trainer API over both algorithm stacks.
+"""repro.engine — the unified Experiment/Trainer API over all three backends.
 
     from repro.engine import ExperimentSpec, Trainer
 
     # the paper's gSSGD on the numpy parameter-server sim
     report = Trainer.from_spec(ExperimentSpec.for_algo("gSSGD", epochs=50)).fit(
         (Xtr, ytr, n_classes, Xte, yte))
+
+    # the jitted scan delay simulator: 30 seeds in one vmapped compile,
+    # trajectories identical to the sim (DESIGN.md §6)
+    report = Trainer.from_spec(ExperimentSpec.for_algo(
+        "gSSGD", backend="scan", n_seeds=30)).fit((Xtr, ytr, n_classes, Xte, yte))
 
     # the same algorithm on the jitted SPMD mesh trainer
     report = Trainer.from_spec(ExperimentSpec(
@@ -19,7 +24,7 @@ touching the jax stack (strategies, the mesh step builder) is re-exported
 lazily so sim-only scripts (paper tables, rho sweeps) don't pay the jax
 import cost.
 """
-from repro.engine.spec import ALGOS, ExperimentSpec  # noqa: F401
+from repro.engine.spec import ALGOS, TOPOLOGIES, ExperimentSpec  # noqa: F401
 from repro.engine.trainer import Report, Trainer  # noqa: F401
 
 _LAZY = {
@@ -32,6 +37,7 @@ _LAZY = {
     "build_train_step": "mesh",
     "init_train_state": "mesh",
     "resolve_strategy": "mesh",
+    "TOPOLOGY_SAMPLERS": "delaysim",
 }
 
 

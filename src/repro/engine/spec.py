@@ -1,17 +1,24 @@
-"""`ExperimentSpec` — one declarative config subsuming both algorithm stacks.
+"""`ExperimentSpec` — one declarative config over all three backends.
 
-The paper's algorithm family previously lived behind two disjoint configs:
+The paper's algorithm family runs at three scales:
 
-  * `PSConfig` + `train_ps` — the numpy event-driven parameter-server
-    simulator (paper-faithful logistic regression, Tables 2-5 / Figs. 2-14);
-  * `GuidedConfig` + `build_train_step` — the jitted SPMD mesh trainer
-    (transformer-scale gSSGD/gASGD/DC-ASGD).
+  * backend="sim" — the numpy event-driven parameter-server reference
+    (`PSConfig` + `train_ps`; paper-faithful, Tables 2-5 / Figs. 2-14);
+  * backend="scan" — the jitted lax.scan delay simulator
+    (`repro.engine.delaysim`): same trajectories as the sim to float64
+    round-off, vmapped over `n_seeds`, delay topologies via `topology`
+    (DESIGN.md §6);
+  * backend="mesh" — the jitted SPMD mesh trainer
+    (`GuidedConfig` + the strategy-hooked step; transformer scale).
 
 An ExperimentSpec names ONE experiment — backend, execution mode, compensation
 strategy, optimizer, schedule, mesh, workers, micro-batching — and lowers to
-whichever legacy config its backend needs (`to_ps_config` / `to_guided_config`).
-`Trainer.from_spec(spec).fit(data)` is the single entry point; see DESIGN.md §1
-for the API and §2 for the old-API → new-API migration table.
+whichever legacy config its backend needs (`to_ps_config` / `to_guided_config`
+/ `to_schedule_config`). Strategy/mode/topology compatibility is validated at
+construction with pure-python rules (no jax import), so bad combinations fail
+fast with the registry's message. `Trainer.from_spec(spec).fit(data)` is the
+single entry point; see DESIGN.md §1 for the API and §2 for the old-API →
+new-API migration table.
 """
 from __future__ import annotations
 
@@ -23,8 +30,24 @@ from repro.core.parameter_server import PSConfig
 if TYPE_CHECKING:  # GuidedConfig lives in the jax stack; import it lazily so
     from repro.core.guided import GuidedConfig  # sim-only scripts stay numpy-light
 
-BACKENDS = ("mesh", "sim")
+BACKENDS = ("mesh", "sim", "scan")
 MODES = ("seq", "ssgd", "asgd")
+
+# Delay topologies of the scan backend (repro.engine.delaysim registers the
+# matching schedule generators): name -> execution modes it is defined for.
+# seq/barrier are the deterministic topologies implied by those modes; the
+# event-queue ones need mode="asgd" (heterogeneous per-arrival staleness).
+TOPOLOGIES = {
+    "seq": ("seq",),
+    "barrier": ("ssgd",),
+    "exp": ("asgd",),          # train_ps's literal exponential compute times
+    "constant": ("asgd",),     # fixed compute time -> round-robin, s = c-1
+    "heavy_tail": ("asgd",),   # Pareto compute times (rare huge delays)
+    "straggler": ("asgd",),    # one worker 10x slower than the rest
+    "hetero": ("asgd",),       # per-worker mean compute time grows with rank
+}
+
+_DEFAULT_TOPOLOGY = {"seq": "seq", "ssgd": "barrier", "asgd": "exp"}
 
 # algorithm names as printed in the paper's tables -> (mode, strategy, optimizer)
 ALGOS = {
@@ -44,6 +67,23 @@ ALGOS = {
 _GUIDED_STRATEGIES = ("guided_fused", "guided_two_pass", "dc_asgd_guided")
 _DC_STRATEGIES = ("dc_asgd", "dc_asgd_guided")
 
+# Strategies that compensate against w_stale and therefore only make sense
+# under asgd execution. Kept as a pure-python table (no jax import) so
+# ExperimentSpec can fail fast at construction; the registry classes raise
+# the same message (via needs_stale_message) when driven directly.
+_STALE_REQUIRED = {
+    "dc_asgd": "compensates with the Taylor term g*g*(W - w_stale)",
+    "dc_asgd_guided": "compensates with the Taylor term g*g*(W - w_stale)",
+    "gap_aware": "dampens by |W - w_stale|",
+}
+
+
+def needs_stale_message(strategy: str, why: str, mode: str) -> str:
+    """The one error message for strategy/mode incompatibility — shared by
+    ExperimentSpec.__post_init__ and the DelayCompensator registry classes."""
+    return (f"{strategy} {why} and needs stale weights: "
+            f"use mode='asgd' (got mode={mode!r})")
+
 
 @dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
@@ -55,7 +95,7 @@ class ExperimentSpec:
     by the other backend.
     """
 
-    backend: str = "mesh"          # mesh | sim
+    backend: str = "mesh"          # mesh | sim | scan
     # ------------------------------------------------- shared algorithm knobs
     mode: str = "ssgd"             # seq | ssgd | asgd (execution/delay model)
     strategy: str = "none"         # DelayCompensator registry name
@@ -64,12 +104,14 @@ class ExperimentSpec:
     optimizer: str = "sgd"
     lr: float = 0.2                # paper Table 1 default
     seed: int = 0
-    # ------------------------------------------------------------- sim knobs
+    # ------------------------------------------------------ sim / scan knobs
     epochs: int = 50
     batch_size: int = 16
     verification_frac: float = 0.2
     rmsprop_beta: float = 0.9
     eps: float = 1e-8
+    topology: str = ""             # scan: TOPOLOGIES key ("" -> mode default)
+    n_seeds: int = 1               # scan: vmap-sweep seed..seed+n_seeds-1
     # ------------------------------------------------------------ mesh knobs
     arch: str = "yi_9b"
     reduced: bool = True
@@ -90,6 +132,39 @@ class ExperimentSpec:
     def __post_init__(self):
         assert self.backend in BACKENDS, self.backend
         assert self.mode in MODES, self.mode
+        # strategy/mode compatibility fails here, at construction, with the
+        # registry's message — not deep inside jit or mid-fit.
+        why = _STALE_REQUIRED.get(self.strategy)
+        if why is not None and self.mode != "asgd":
+            raise ValueError(needs_stale_message(self.strategy, why, self.mode))
+        if self.n_seeds < 1:
+            raise ValueError(f"n_seeds must be >= 1 (got {self.n_seeds})")
+        if self.n_seeds > 1 and self.backend != "scan":
+            raise ValueError(
+                f"n_seeds={self.n_seeds} needs the vmapped scan backend; "
+                f"backend={self.backend!r} runs one seed per fit"
+            )
+        if self.topology:
+            if self.topology not in TOPOLOGIES:
+                raise ValueError(
+                    f"unknown topology {self.topology!r}; known: "
+                    f"{', '.join(TOPOLOGIES)}"
+                )
+            if self.backend != "scan":
+                raise ValueError(
+                    f"topology={self.topology!r} is a scan-backend knob "
+                    f"(backend={self.backend!r} hardcodes its delay model)"
+                )
+            if self.mode not in TOPOLOGIES[self.topology]:
+                raise ValueError(
+                    f"topology {self.topology!r} is defined for mode(s) "
+                    f"{TOPOLOGIES[self.topology]}, got mode={self.mode!r}"
+                )
+
+    @property
+    def resolved_topology(self) -> str:
+        """The schedule topology this spec runs (mode default when unset)."""
+        return self.topology or _DEFAULT_TOPOLOGY[self.mode]
 
     def replace(self, **kw) -> "ExperimentSpec":
         return dataclasses.replace(self, **kw)
@@ -106,8 +181,17 @@ class ExperimentSpec:
         if self.strategy not in ("none", "guided_fused", "guided_two_pass"):
             raise ValueError(
                 f"strategy {self.strategy!r} has no parameter-server simulation; "
-                "use backend='mesh'"
+                "use backend='mesh' or backend='scan'"
             )
+        return self.to_schedule_config()
+
+    def to_schedule_config(self, seed: int = None) -> PSConfig:
+        """PSConfig view for the scan backend's data prep + schedule
+        extraction (core.parameter_server.prepare_run). Unlike to_ps_config
+        this does NOT restrict the strategy: on the scan path the strategy
+        stays a live DelayCompensator driving the apply hooks, only the
+        protocol knobs (mode, epochs, batching, rho, seed) are lowered.
+        `seed` overrides spec.seed for the vmapped multi-seed sweep."""
         return PSConfig(
             mode=self.mode,
             guided=self.guided,
@@ -120,7 +204,7 @@ class ExperimentSpec:
             verification_frac=self.verification_frac,
             rmsprop_beta=self.rmsprop_beta,
             eps=self.eps,
-            seed=self.seed,
+            seed=self.seed if seed is None else seed,
         )
 
     @classmethod

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import guided as G
+from repro.engine.spec import needs_stale_message
 
 
 class DelayCompensator:
@@ -72,6 +73,43 @@ class DelayCompensator:
         """Next value of the strategy-owned extra state."""
         return state.extra
 
+    # ------------------------------------------------------- scan-sim hooks
+    # The jitted delay-simulation backend (repro.engine.delaysim) drives the
+    # same registry through these three seams instead of reimplementing the
+    # paper's guided logic in its scan body (DESIGN.md §6). They trace inside
+    # lax.scan, so the same purity/shape rules apply as for the mesh hooks.
+
+    #: True -> the scan body tracks per-arrival consistency (loss-before /
+    #: loss-after of the applied batch + verification loss) and calls
+    #: sim_score / sim_replay; False skips that bookkeeping entirely.
+    sim_guided = False
+
+    def sim_kernel_lambda(self) -> float:
+        """DC-ASGD Taylor coefficient folded directly into the fused Pallas
+        apply kernel (g~ = g + lam*g*g*(W - W_stale)). Non-zero means the
+        kernel performs the compensation and compensate_grads is skipped."""
+        return 0.0
+
+    def sim_score(self, d_own, d_avg, prev_avg_err):
+        """Paper Fig. 7 consistency score of ONE arrival: the applied batch is
+        consistent when the step moved both its own loss (d_own) and the
+        verification-average loss (d_avg) downward; ranked by the relative
+        average-error drop. Returns 0 for inconsistent arrivals (never stored).
+        """
+        ok = jnp.isfinite(prev_avg_err) & (d_own < 0) & (d_avg < 0)
+        return jnp.where(ok, -d_avg / (jnp.abs(prev_avg_err) + 1e-12), 0.0)
+
+    def sim_replay(self, W, window_scores, window_grads, lr):
+        """Window-end replay (Fig. 7 line 8): re-apply the stored gradients of
+        the <=max_consistent most consistent arrivals of the closing window,
+        plain SGD style (W -= lr * g), exactly as printed in the paper.
+        top_k breaks ties by lowest index = arrival order, matching the
+        reference loop's stable sort over psi insertion order."""
+        k = min(self.gcfg.max_consistent, window_scores.shape[0])
+        top_v, top_i = jax.lax.top_k(window_scores, k)
+        sel = (top_v > 0).astype(W.dtype)
+        return W - lr * jnp.tensordot(sel, window_grads[top_i], axes=1)
+
 
 def _fused_weights(state: G.GuidedState, gcfg: G.GuidedConfig, c: int):
     """(c,) top-k consistency weights at window end, zeros otherwise."""
@@ -103,6 +141,7 @@ class GuidedFused(DelayCompensator):
     GuidedConfig.guided/correction flags."""
 
     name = "guided_fused"
+    sim_guided = True
 
     def correction_weights(self, state: G.GuidedState, c: int):
         return _fused_weights(state, self.gcfg, c)
@@ -114,6 +153,7 @@ class GuidedTwoPass(DelayCompensator):
     already-moved iterate. Like guided_fused, the name is authoritative."""
 
     name = "guided_two_pass"
+    sim_guided = True  # the sim has exactly one guided path (the literal replay)
 
     def correct(self, params, state: G.GuidedState, lr, weighted_grad_fn):
         return _two_pass_correct(params, state, self.gcfg, lr, weighted_grad_fn)
@@ -124,6 +164,9 @@ class DcAsgd(DelayCompensator):
     Pure Taylor compensation; no guided replay (see DcAsgdGuided)."""
 
     name = "dc_asgd"
+
+    def sim_kernel_lambda(self) -> float:
+        return self.gcfg.dc_lambda
 
     def compensate_grads(self, grads, params, state: G.GuidedState):
         return G.compensate_dc_asgd(grads, params, state.w_stale, self.gcfg.dc_lambda)
@@ -137,6 +180,7 @@ class DcAsgdGuided(DcAsgd):
     update), preserving every legacy combination bit-for-bit."""
 
     name = "dc_asgd_guided"
+    sim_guided = True
 
     def correction_weights(self, state: G.GuidedState, c: int):
         if self.gcfg.correction != "fused":
@@ -164,17 +208,19 @@ class GapAware(DelayCompensator):
     def __init__(self, gcfg: G.GuidedConfig):
         if not gcfg.needs_stale:
             raise ValueError(
-                "gap_aware dampens by |W - w_stale| and needs stale weights: "
-                "use mode='asgd' (got mode=%r)" % (gcfg.mode,)
+                needs_stale_message("gap_aware", "dampens by |W - w_stale|", gcfg.mode)
             )
         super().__init__(gcfg)
 
     def compensate_grads(self, grads, params, state: G.GuidedState):
         def one(g, p, ps):
-            g32 = g.astype(jnp.float32)
-            gap = jnp.abs(p.astype(jnp.float32) - ps.astype(jnp.float32))
-            rms = jnp.sqrt(jnp.mean(jnp.square(g32)) + 1e-12)
-            return (g32 / (1.0 + gap / jnp.maximum(rms, 1e-12))).astype(g.dtype)
+            # compute dtype follows the gradients (>= f32): bf16 mesh grads
+            # upcast as before, the scan backend's f64 regime stays f64
+            ct = jnp.promote_types(g.dtype, jnp.float32)
+            gc = g.astype(ct)
+            gap = jnp.abs(p.astype(ct) - ps.astype(ct))
+            rms = jnp.sqrt(jnp.mean(jnp.square(gc)) + 1e-12)
+            return (gc / (1.0 + gap / jnp.maximum(rms, 1e-12))).astype(g.dtype)
 
         return jax.tree.map(one, grads, params, state.w_stale)
 

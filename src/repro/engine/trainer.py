@@ -1,8 +1,13 @@
-"""`Trainer` — one facade over both backends, `Report` — one result type.
+"""`Trainer` — one facade over the three backends, `Report` — one result type.
 
     spec = ExperimentSpec(backend="sim", mode="ssgd", strategy="guided_fused")
     report = Trainer.from_spec(spec).fit((Xtr, ytr, n_classes, Xte, yte))
     report.test_accuracy, report.history
+
+    spec = ExperimentSpec(backend="scan", mode="asgd", strategy="dc_asgd",
+                          topology="heavy_tail", n_seeds=30)
+    report = Trainer.from_spec(spec).fit((Xtr, ytr, n_classes, Xte, yte))
+    report.wall_time_s, report.steps_per_s          # (timing on every backend)
 
     spec = ExperimentSpec(backend="mesh", arch="yi_9b", strategy="guided_fused")
     report = Trainer.from_spec(spec).fit()          # synthetic LM stream
@@ -11,8 +16,11 @@
 The mesh path jits the strategy-driven step from `repro.engine.mesh` and is
 numerically identical, step for step, to the legacy
 `train.steps.build_train_step` loop (tests/test_engine.py locks this in).
-The sim path drives the literal numpy parameter server. Either way the caller
-never touches `PSConfig`, `GuidedConfig`, `train_ps` or `build_train_step`.
+The sim path drives the literal numpy parameter server; the scan path drives
+the jitted `repro.engine.delaysim` simulator, which reproduces the sim's
+trajectories to float64 round-off (tests/test_delaysim.py). Either way the
+caller never touches `PSConfig`, `GuidedConfig`, `train_ps` or
+`build_train_step`.
 """
 from __future__ import annotations
 
@@ -35,8 +43,11 @@ class Report:
     spec: ExperimentSpec
     history: list
     final: dict
-    model: Any = None          # sim: LogisticRegression; mesh: params pytree
+    model: Any = None          # sim/scan: LogisticRegression (scan n_seeds>1:
+                               # list of them); mesh: params pytree
     state: Any = None          # mesh: final GuidedState
+    wall_time_s: float = 0.0   # wall time of fit() (incl. jit compile)
+    steps_per_s: float = 0.0   # server steps (x seeds on scan) per second
 
     @property
     def final_loss(self) -> Optional[float]:
@@ -69,6 +80,10 @@ class Trainer:
 
             # resolve eagerly so unknown names fail at from_spec, not mid-fit
             self.strategy = resolve_strategy(spec.to_guided_config(), spec.strategy)
+        elif spec.backend == "scan":
+            from repro.engine.strategies import get_compensator
+
+            self.strategy = get_compensator(spec.strategy, spec.to_guided_config())
         else:
             spec.to_ps_config()  # validates mode/strategy for the simulator
 
@@ -95,14 +110,22 @@ class Trainer:
         own log-step records pass keep_history=False to retain (and sync)
         only the final step.
         """
-        if self.spec.backend == "sim":
+        t0 = time.perf_counter()
+        if self.spec.backend in ("sim", "scan"):
             if steps is not None or on_step is not None:
                 raise ValueError(
-                    "steps/on_step apply to the mesh backend; the sim runs "
-                    "the paper's epoch protocol (set spec.epochs instead)"
+                    "steps/on_step apply to the mesh backend; the sim/scan "
+                    "backends run the paper's epoch protocol (set spec.epochs)"
                 )
-            return self._fit_sim(data)
-        return self._fit_mesh(data, steps, on_step, keep_history)
+            report = (self._fit_sim(data) if self.spec.backend == "sim"
+                      else self._fit_scan(data))
+            n_steps = len(report.history) * self.spec.n_seeds
+        else:
+            report = self._fit_mesh(data, steps, on_step, keep_history)
+            n_steps = steps or self.spec.steps
+        report.wall_time_s = time.perf_counter() - t0
+        report.steps_per_s = n_steps / max(report.wall_time_s, 1e-9)
+        return report
 
     def _fit_sim(self, data) -> Report:
         from repro.core.parameter_server import train_ps
@@ -114,6 +137,22 @@ class Trainer:
         res = train_ps(X, y, n_classes, self.spec.to_ps_config(), Xtest, ytest)
         final = {k: res[k] for k in ("train_loss", "val_loss", "test_accuracy") if k in res}
         return Report(backend="sim", spec=self.spec, history=res["history"],
+                      final=final, model=res["model"])
+
+    def _fit_scan(self, data) -> Report:
+        """The jitted lax.scan delay simulator (repro.engine.delaysim): same
+        data contract and Report shape as the sim backend; n_seeds > 1 turns
+        the final metrics into (n_seeds,) arrays (one vmapped compile)."""
+        from repro.engine import delaysim
+
+        if data is None:
+            raise ValueError("scan backend needs data=(X, y, n_classes[, Xtest, ytest])")
+        X, y, n_classes, *rest = data
+        Xtest, ytest = (rest + [None, None])[:2]
+        res = delaysim.run(self.spec, X, y, n_classes, Xtest, ytest,
+                           strategy=self.strategy)
+        final = {k: res[k] for k in ("train_loss", "val_loss", "test_accuracy") if k in res}
+        return Report(backend="scan", spec=self.spec, history=res["history"],
                       final=final, model=res["model"])
 
     def _fit_mesh(self, data, steps, on_step, keep_history=True) -> Report:

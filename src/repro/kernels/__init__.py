@@ -1,3 +1,12 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+
+def default_interpret() -> bool:
+    """The one interpret-mode policy for every Pallas kernel in this package:
+    compiled on gpu/tpu, interpret (pure-XLA emulation) on cpu and anything
+    else without a kernel-capable accelerator."""
+    import jax
+
+    return jax.default_backend() not in ("gpu", "tpu")

@@ -6,11 +6,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_raw
-
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "bq", "bk", "q_offset"))
@@ -18,7 +15,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     q_offset: int = 0, bq: int = 128, bk: int = 128):
     """q: (B,S,H,dh); k,v: (B,S,K,dh) -> (B,S,H,dh) in q.dtype."""
     acc, m, l = flash_attention_raw(
-        q, k, v, causal=causal, window=window, bq=bq, bk=bk, interpret=_use_interpret()
+        q, k, v, causal=causal, window=window, bq=bq, bk=bk, interpret=default_interpret()
     )
     out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,H,S,dh)
     return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)

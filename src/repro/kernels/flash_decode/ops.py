@@ -6,11 +6,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.flash_decode.kernel import flash_decode_raw
-
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @partial(jax.jit, static_argnames=("bk",))
@@ -19,6 +16,6 @@ def flash_decode(q, k_cache, v_cache, cache_len, *, bk: int = 256):
     S = k_cache.shape[1]
     cache_len = jnp.minimum(cache_len, S)  # ring-buffer: full cache once wrapped
     num, den = flash_decode_raw(q, k_cache, v_cache, cache_len, bk=min(bk, S),
-                                interpret=_use_interpret())
+                                interpret=default_interpret())
     out = num / jnp.maximum(den, 1e-30)[..., None]
     return out[:, None].astype(q.dtype)

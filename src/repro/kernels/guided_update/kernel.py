@@ -12,64 +12,62 @@ and one write of W' — strictly memory-bound, so fusing is a ~2x traffic win on
 the update phase (see EXPERIMENTS.md §Perf). The rmsprop variant additionally
 carries the r accumulator in the same pass (paper Fig. 11).
 
+This is also the apply path of the scan delay-simulation backend
+(repro.engine.delaysim): `interpret` autodetects from jax.default_backend()
+(compiled on gpu/tpu, interpret on cpu), and the compute dtype follows the
+weights (promote_types(w.dtype, float32)), so the float64 parity runs of the
+scan backend reproduce the numpy reference loop exactly while bf16/f32 mesh
+weights keep the f32 arithmetic the TPU path compiles to.
+
 Tiling: flat 1-D blocks of 64k elements (512 KiB fp32) per grid step.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret  # noqa: F401  (re-export: ops.py, delaysim)
+
+
+def _compute_dtype(dtype):
+    return jnp.promote_types(dtype, jnp.float32)
+
 
 def _sgd_kernel(w_ref, g_ref, ws_ref, scal_ref, out_ref):
+    ct = _compute_dtype(w_ref.dtype)
     lr = scal_ref[0]
     lam = scal_ref[1]
-    w = w_ref[...].astype(jnp.float32)
-    g = g_ref[...].astype(jnp.float32)
-    ws = ws_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(ct)
+    g = g_ref[...].astype(ct)
+    ws = ws_ref[...].astype(ct)
     gt = g + lam * g * g * (w - ws)
     out_ref[...] = (w - lr * gt).astype(out_ref.dtype)
 
 
 def _rmsprop_kernel(w_ref, g_ref, ws_ref, r_ref, scal_ref, out_ref, r_out_ref):
+    ct = _compute_dtype(w_ref.dtype)
     lr = scal_ref[0]
     lam = scal_ref[1]
     beta = scal_ref[2]
     eps = scal_ref[3]
-    w = w_ref[...].astype(jnp.float32)
-    g = g_ref[...].astype(jnp.float32)
-    ws = ws_ref[...].astype(jnp.float32)
-    r = r_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(ct)
+    g = g_ref[...].astype(ct)
+    ws = ws_ref[...].astype(ct)
+    r = r_ref[...].astype(ct)
     gt = g + lam * g * g * (w - ws)
     r_new = beta * r + (1.0 - beta) * gt * gt
     out_ref[...] = (w - lr * gt / jnp.sqrt(r_new + eps)).astype(out_ref.dtype)
     r_out_ref[...] = r_new
 
 
-def _flat_call(kernel, n_out, arrs, scalars, block: int, out_dtypes):
-    n = arrs[0].size
-    block = min(block, n)
-    pad = (-n) % block
-    flat = [jnp.pad(a.reshape(-1), (0, pad)) for a in arrs]
-    m = n + pad
-    grid = (m // block,)
-    outs = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[pl.BlockSpec((block,), lambda i: (i,)) for _ in flat]
-        + [pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=[pl.BlockSpec((block,), lambda i: (i,)) for _ in range(n_out)],
-        out_shape=[jax.ShapeDtypeStruct((m,), dt) for dt in out_dtypes],
-        interpret=True,
-    )(*flat, scalars)
-    return [o[:n] for o in outs]
-
-
-def guided_sgd_update_raw(w, g, w_stale, lr, lam, *, block: int = 65536, interpret: bool = True):
+def guided_sgd_update_raw(w, g, w_stale, lr, lam, *, block: int = 65536,
+                          interpret: bool = None):
     """Flat fused update for one parameter leaf. Returns new w."""
-    scalars = jnp.stack([jnp.asarray(lr, jnp.float32), jnp.asarray(lam, jnp.float32)])
+    if interpret is None:
+        interpret = default_interpret()
+    ct = _compute_dtype(w.dtype)
+    scalars = jnp.stack([jnp.asarray(lr, ct), jnp.asarray(lam, ct)])
     n = w.size
     block = min(block, n)
     pad = (-n) % block
@@ -94,10 +92,13 @@ def guided_sgd_update_raw(w, g, w_stale, lr, lam, *, block: int = 65536, interpr
 
 
 def guided_rmsprop_update_raw(w, g, w_stale, r, lr, lam, beta, eps, *, block: int = 65536,
-                              interpret: bool = True):
+                              interpret: bool = None):
+    if interpret is None:
+        interpret = default_interpret()
+    ct = _compute_dtype(w.dtype)
     scalars = jnp.stack([
-        jnp.asarray(lr, jnp.float32), jnp.asarray(lam, jnp.float32),
-        jnp.asarray(beta, jnp.float32), jnp.asarray(eps, jnp.float32),
+        jnp.asarray(lr, ct), jnp.asarray(lam, ct),
+        jnp.asarray(beta, ct), jnp.asarray(eps, ct),
     ])
     n = w.size
     block = min(block, n)
@@ -117,7 +118,7 @@ def guided_rmsprop_update_raw(w, g, w_stale, r, lr, lam, beta, eps, *, block: in
         out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
                    pl.BlockSpec((block,), lambda i: (i,))],
         out_shape=[jax.ShapeDtypeStruct((m,), w.dtype),
-                   jax.ShapeDtypeStruct((m,), jnp.float32)],
+                   jax.ShapeDtypeStruct((m,), ct)],
         interpret=interpret,
     )(pad_(w), pad_(g), pad_(w_stale), pad_(r), scalars)
     return out[:n].reshape(w.shape), r_new[:n].reshape(w.shape)

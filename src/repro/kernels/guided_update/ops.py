@@ -7,13 +7,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.guided_update.kernel import (
+    default_interpret,
     guided_rmsprop_update_raw,
     guided_sgd_update_raw,
 )
-
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @partial(jax.jit, static_argnames=("block",))
@@ -21,7 +18,7 @@ def guided_sgd_update(params, grads, w_stale, lr, lam=0.0, *, block: int = 65536
     """Tree-level fused update: one kernel launch per leaf."""
     return jax.tree.map(
         lambda w, g, ws: guided_sgd_update_raw(w, g, ws, lr, lam, block=block,
-                                               interpret=_use_interpret()),
+                                               interpret=default_interpret()),
         params, grads, w_stale,
     )
 
@@ -31,7 +28,7 @@ def guided_rmsprop_update(params, grads, w_stale, r, lr, lam=0.0, beta=0.9,
                           eps=1e-8, *, block: int = 65536):
     out = jax.tree.map(
         lambda w, g, ws, ri: guided_rmsprop_update_raw(
-            w, g, ws, ri, lr, lam, beta, eps, block=block, interpret=_use_interpret()),
+            w, g, ws, ri, lr, lam, beta, eps, block=block, interpret=default_interpret()),
         params, grads, w_stale, r,
     )
     new_w = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))

@@ -6,11 +6,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.selective_scan.kernel import selective_scan_raw
-
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @partial(jax.jit, static_argnames=("chunk", "block_ed"))
@@ -23,5 +20,5 @@ def selective_scan(x, dt, A, Bc, Cc, h0=None, *, chunk: int = 16, block_ed: int 
     return selective_scan_raw(
         x.astype(jnp.float32), dt.astype(jnp.float32), A.astype(jnp.float32),
         Bc.astype(jnp.float32), Cc.astype(jnp.float32), h0.astype(jnp.float32),
-        Q=min(chunk, S), be=min(block_ed, ed), interpret=_use_interpret(),
+        Q=min(chunk, S), be=min(block_ed, ed), interpret=default_interpret(),
     )

@@ -1,0 +1,280 @@
+"""Tests for the jitted scan delay-simulation backend (repro.engine.delaysim):
+
+  * trajectory parity with the numpy reference loop (train_ps) for the
+    paper's algorithms — the acceptance bar is 1e-5 on the final losses;
+    float64 + an identical schedule give ~1e-15 in practice;
+  * DelaySchedule extraction semantics (seq / barrier / event-queue);
+  * multi-seed vmap: one n_seeds=k run equals k independent runs leaf-for-leaf;
+  * the new delay topologies and scan-only strategies (dc_asgd, gap_aware);
+  * ExperimentSpec construction-time validation of strategy/mode/topology.
+"""
+import numpy as np
+import pytest
+
+from repro.core.parameter_server import (
+    PSConfig,
+    algo_config,
+    extract_schedule,
+    prepare_run,
+    train_ps,
+)
+from repro.data import load_dataset, train_test_split
+from repro.engine import ExperimentSpec, TOPOLOGIES, Trainer
+
+
+@pytest.fixture(scope="module")
+def cancer():
+    X, y, k = load_dataset("cancer", seed=0)
+    Xtr, ytr, Xte, yte = train_test_split(X, y, seed=2)
+    return Xtr[:260], ytr[:260], k, Xte, yte
+
+
+@pytest.fixture(scope="module")
+def thyroid():
+    X, y, k = load_dataset("new_thyroid", seed=0)
+    Xtr, ytr, Xte, yte = train_test_split(X, y, seed=1)
+    return Xtr, ytr, k, Xte, yte
+
+
+# ------------------------------------------------------------------ parity
+
+
+@pytest.mark.parametrize("algo", ["SGD", "SSGD", "gSSGD", "ASGD"])
+def test_scan_matches_train_ps_trajectory(cancer, algo):
+    """The acceptance-criteria lock: backend='scan' reproduces the numpy
+    train_ps trajectory (same seed -> same schedule) to <=1e-5 final loss."""
+    Xtr, ytr, k, Xte, yte = cancer
+    legacy = train_ps(Xtr, ytr, k, algo_config(algo, epochs=2, seed=2), Xte, yte)
+    rep = Trainer.from_spec(
+        ExperimentSpec.for_algo(algo, epochs=2, seed=2, backend="scan")
+    ).fit((Xtr, ytr, k, Xte, yte))
+    assert abs(rep.final_loss - legacy["train_loss"]) <= 1e-5
+    assert abs(rep.val_loss - legacy["val_loss"]) <= 1e-5
+    h_np = np.array([h[1] for h in legacy["history"]])
+    h_sc = np.array([h[1] for h in rep.history])
+    assert h_np.shape == h_sc.shape
+    np.testing.assert_allclose(h_sc, h_np, atol=1e-5, rtol=0)
+    assert rep.test_accuracy == legacy["test_accuracy"]
+
+
+@pytest.mark.parametrize("algo", ["gSGD", "gASGD", "SRMSprop", "gSAdagrad"])
+def test_scan_matches_train_ps_variants(cancer, algo):
+    """Optimizer variants + remaining guided combos hold the same parity."""
+    Xtr, ytr, k, Xte, yte = cancer
+    legacy = train_ps(Xtr, ytr, k, algo_config(algo, epochs=2, seed=3), Xte, yte)
+    rep = Trainer.from_spec(
+        ExperimentSpec.for_algo(algo, epochs=2, seed=3, backend="scan")
+    ).fit((Xtr, ytr, k, Xte, yte))
+    assert abs(rep.final_loss - legacy["train_loss"]) <= 1e-5
+    assert abs(rep.val_loss - legacy["val_loss"]) <= 1e-5
+
+
+# -------------------------------------------------------- schedule extraction
+
+
+def test_schedule_seq_and_barrier_shapes():
+    cfg = PSConfig(mode="seq", epochs=2, batch_size=8, rho=4, seed=0)
+    rng = np.random.default_rng(0)
+    s = extract_schedule(cfg, 50, rng)
+    nb = (50 - 8) // 8 + 1
+    assert s.n_steps == 2 * nb
+    assert s.topology == "seq" and s.n_workers == 1
+    assert s.max_staleness == 0
+
+    cfg = PSConfig(mode="ssgd", epochs=1, batch_size=8, rho=4, seed=0)
+    s = extract_schedule(cfg, 50, np.random.default_rng(0))
+    # barrier sawtooth: 0..c-1 per round, truncated final round
+    assert list(s.staleness) == [0, 1, 2, 3, 0, 1]
+    assert s.max_staleness == cfg.n_workers - 1
+
+
+def test_schedule_asgd_event_queue_is_causal_and_covers_all_batches():
+    cfg = PSConfig(mode="asgd", epochs=2, batch_size=8, rho=4, seed=7)
+    rng = np.random.default_rng(7)
+    s = extract_schedule(cfg, 64, rng)
+    nb = (64 - 8) // 8 + 1
+    assert s.n_steps == 2 * nb
+    # staleness never reaches before step 0 and resets across epochs
+    i = np.arange(s.n_steps)
+    assert (s.staleness <= i).all() and (s.staleness >= 0).all()
+    # every batch of each epoch applied exactly once (rows partition the perm)
+    per_epoch = s.batch_rows[:nb].reshape(-1)
+    assert len(np.unique(per_epoch)) == nb * 8
+
+
+def test_prepare_run_mirrors_train_ps_rng_protocol(cancer):
+    """Same seed -> the schedule's batches are the ones train_ps consumed
+    (checked indirectly through the parity tests; directly here: W0 and the
+    validation split match a hand-replay of the rng protocol)."""
+    Xtr, ytr, k, _, _ = cancer
+    cfg = PSConfig(mode="ssgd", epochs=1, seed=11)
+    W0, (Xt, yt), (Xv, yv), sched = prepare_run(Xtr, ytr, k, cfg)
+    rng = np.random.default_rng(11)
+    n_val = max(8, int(cfg.verification_frac * len(Xtr)))
+    vidx = rng.choice(len(Xtr), n_val, replace=False)
+    np.testing.assert_array_equal(Xv, Xtr[vidx])
+    mask = np.ones(len(Xtr), bool)
+    mask[vidx] = False
+    W0_ref = 0.01 * rng.standard_normal((Xtr.shape[1] + 1, k))
+    np.testing.assert_array_equal(W0, W0_ref)
+    assert sched.batch_rows.shape[1] == cfg.batch_size
+    assert len(Xt) == mask.sum()
+
+
+# ----------------------------------------------------------- multi-seed vmap
+
+
+def test_multi_seed_vmap_equals_independent_runs(thyroid):
+    """n_seeds=4 returns, leaf for leaf, exactly what four independent
+    n_seeds=1 fits return (same compile or not, bitwise equal)."""
+    Xtr, ytr, k, Xte, yte = thyroid
+    rep4 = Trainer.from_spec(
+        ExperimentSpec.for_algo("gSSGD", epochs=3, seed=5, backend="scan", n_seeds=4)
+    ).fit((Xtr, ytr, k, Xte, yte))
+    assert rep4.final["train_loss"].shape == (4,)
+    for i in range(4):
+        r1 = Trainer.from_spec(
+            ExperimentSpec.for_algo("gSSGD", epochs=3, seed=5 + i, backend="scan")
+        ).fit((Xtr, ytr, k, Xte, yte))
+        assert float(rep4.final["train_loss"][i]) == r1.final_loss
+        assert float(rep4.final["val_loss"][i]) == r1.val_loss
+        assert float(rep4.final["test_accuracy"][i]) == r1.test_accuracy
+        assert all(float(h4[1][i]) == h1[1]
+                   for h4, h1 in zip(rep4.history, r1.history))
+        np.testing.assert_array_equal(rep4.model[i].W, r1.model.W)
+
+
+# -------------------------------------------------------------- topologies
+
+
+@pytest.mark.parametrize("topology", ["constant", "heavy_tail", "straggler", "hetero"])
+def test_event_topologies_run_and_are_causal(thyroid, topology):
+    Xtr, ytr, k, Xte, yte = thyroid
+    spec = ExperimentSpec(backend="scan", mode="asgd", strategy="guided_fused",
+                          topology=topology, epochs=2, seed=0, rho=6)
+    rep = Trainer.from_spec(spec).fit((Xtr, ytr, k, Xte, yte))
+    assert np.isfinite(rep.final_loss)
+    from repro.engine.delaysim import TOPOLOGY_SAMPLERS
+
+    _, _, _, sched = prepare_run(Xtr, ytr, k, spec.to_schedule_config(),
+                                 TOPOLOGY_SAMPLERS[topology], topology)
+    i = np.arange(sched.n_steps)
+    assert (sched.staleness <= i).all() and (sched.staleness >= 0).all()
+    assert sched.topology == topology
+
+
+def test_constant_topology_is_round_robin(thyroid):
+    """Equal compute times -> deterministic round-robin arrivals with the
+    classic steady-state staleness c-1."""
+    Xtr, ytr, k, _, _ = thyroid
+    from repro.engine.delaysim import TOPOLOGY_SAMPLERS
+
+    cfg = PSConfig(mode="asgd", epochs=1, rho=4, batch_size=8, seed=0)
+    _, _, _, sched = prepare_run(Xtr, ytr, k, cfg,
+                                 TOPOLOGY_SAMPLERS["constant"], "constant")
+    c = cfg.n_workers
+    # after the initial ramp (staleness 0..c-1), steady state is c-1
+    steady = sched.staleness[c:]
+    assert (steady == c - 1).all()
+    assert list(sched.staleness[:c]) == list(range(min(c, sched.n_steps)))
+
+
+def test_scan_only_strategies_run_at_paper_scale(thyroid):
+    """dc_asgd and gap_aware have no numpy-sim path; through the registry
+    hooks they now run on the scan backend (this is new capability)."""
+    Xtr, ytr, k, Xte, yte = thyroid
+    base = ExperimentSpec(backend="scan", mode="asgd", strategy="none",
+                          epochs=2, seed=0)
+    r0 = Trainer.from_spec(base).fit((Xtr, ytr, k, Xte, yte))
+    for strat in ("dc_asgd", "gap_aware"):
+        r = Trainer.from_spec(base.replace(strategy=strat)).fit((Xtr, ytr, k, Xte, yte))
+        assert np.isfinite(r.final_loss)
+        # compensation must actually change the trajectory
+        assert r.final_loss != r0.final_loss
+
+
+# ------------------------------------------------------- spec validation
+
+
+def test_spec_rejects_stale_strategies_without_asgd():
+    for strat in ("gap_aware", "dc_asgd", "dc_asgd_guided"):
+        with pytest.raises(ValueError, match="asgd"):
+            ExperimentSpec(backend="scan", mode="ssgd", strategy=strat)
+        with pytest.raises(ValueError, match="asgd"):
+            ExperimentSpec(backend="mesh", mode="seq", strategy=strat)
+
+
+def test_spec_validates_topology():
+    with pytest.raises(ValueError, match="unknown topology"):
+        ExperimentSpec(backend="scan", mode="asgd", topology="wormhole")
+    with pytest.raises(ValueError, match="scan-backend knob"):
+        ExperimentSpec(backend="sim", mode="asgd", topology="heavy_tail")
+    with pytest.raises(ValueError, match="defined for mode"):
+        ExperimentSpec(backend="scan", mode="ssgd", topology="heavy_tail")
+    # canonical names pass for their modes
+    ExperimentSpec(backend="scan", mode="ssgd", topology="barrier")
+    ExperimentSpec(backend="scan", mode="asgd", topology="exp")
+    assert ExperimentSpec(backend="scan", mode="ssgd").resolved_topology == "barrier"
+    assert set(TOPOLOGIES) >= {"seq", "barrier", "exp", "constant",
+                               "heavy_tail", "straggler", "hetero"}
+
+
+def test_spec_validates_n_seeds():
+    with pytest.raises(ValueError, match="n_seeds"):
+        ExperimentSpec(backend="scan", n_seeds=0)
+    with pytest.raises(ValueError, match="scan"):
+        ExperimentSpec(backend="sim", mode="ssgd", n_seeds=4)
+    with pytest.raises(ValueError, match="scan"):
+        ExperimentSpec(backend="mesh", n_seeds=2)
+
+
+def test_spec_and_registry_share_the_stale_message():
+    from repro.engine.spec import needs_stale_message
+    from repro.engine import get_compensator
+    from repro.core.guided import GuidedConfig
+
+    with pytest.raises(ValueError) as spec_err:
+        ExperimentSpec(backend="mesh", mode="ssgd", strategy="gap_aware")
+    with pytest.raises(ValueError) as reg_err:
+        get_compensator("gap_aware", GuidedConfig(mode="ssgd"))
+    assert str(spec_err.value) == str(reg_err.value)
+    assert "stale weights" in needs_stale_message("x", "y", "ssgd")
+
+
+# ------------------------------------------------------------------ report
+
+
+def test_report_gains_timing_fields(thyroid):
+    Xtr, ytr, k, Xte, yte = thyroid
+    rep = Trainer.from_spec(
+        ExperimentSpec.for_algo("SSGD", epochs=1, backend="scan")
+    ).fit((Xtr, ytr, k, Xte, yte))
+    assert rep.wall_time_s > 0
+    assert rep.steps_per_s > 0
+    sim = Trainer.from_spec(
+        ExperimentSpec.for_algo("SSGD", epochs=1)
+    ).fit((Xtr, ytr, k, Xte, yte))
+    assert sim.wall_time_s > 0 and sim.steps_per_s > 0
+
+
+def test_scan_handles_zero_batches_like_train_ps(thyroid):
+    """batch_size > n_train yields zero arrivals; both backends return the
+    untouched init instead of crashing."""
+    Xtr, ytr, k, Xte, yte = thyroid
+    X20, y20 = Xtr[:20], ytr[:20]
+    spec = ExperimentSpec.for_algo("SSGD", epochs=2, seed=0, batch_size=64)
+    ref = Trainer.from_spec(spec).fit((X20, y20, k, Xte, yte))
+    rep = Trainer.from_spec(spec.replace(backend="scan")).fit((X20, y20, k, Xte, yte))
+    assert rep.history == [] == ref.history
+    assert rep.final_loss == ref.final_loss
+    assert rep.test_accuracy == ref.test_accuracy
+
+
+def test_scan_rejects_missing_data():
+    with pytest.raises(ValueError, match="scan backend needs data"):
+        Trainer.from_spec(ExperimentSpec.for_algo("SSGD", backend="scan")).fit()
+
+
+def test_trainer_resolves_scan_strategy_eagerly():
+    with pytest.raises(KeyError, match="registered:"):
+        Trainer.from_spec(ExperimentSpec(backend="scan", strategy="nope"))
