@@ -33,8 +33,12 @@ def sweep(dataset="pima", runs=10, epochs=50, backend="scan"):
 
 
 def main(runs=10, epochs=50, backend="scan"):
-    results = {ds: sweep(ds, runs, epochs, backend=backend)
-               for ds in ("pima", "liver_filtered")}
+    from benchmarks.sweep_util import end_of_sweep
+
+    results = {}
+    for ds in ("pima", "liver_filtered"):
+        results[ds] = sweep(ds, runs, epochs, backend=backend)
+        end_of_sweep(backend)
     import os
 
     os.makedirs("results", exist_ok=True)

@@ -101,6 +101,9 @@ def tables(which: str = "canonical", runs: int = 30, epochs: int = 50,
             row = " ".join(f"{a}={results[ds][a]['avg']:5.1f}±{results[ds][a]['tol']:3.1f}"
                            for a in algos)
             print(f"  {ds:28s} {row}", flush=True)
+        from benchmarks.sweep_util import end_of_sweep
+
+        end_of_sweep(backend)  # next dataset's shapes can't reuse these compiles
     return results
 
 

@@ -43,7 +43,12 @@ def sweep(dataset: str, runs: int = 10, epochs: int = 50, guided_both=True,
 
 
 def main(runs=10, epochs=50, datasets=("liver_filtered", "pima"), backend="scan"):
-    results = {ds: sweep(ds, runs, epochs, backend=backend) for ds in datasets}
+    from benchmarks.sweep_util import end_of_sweep
+
+    results = {}
+    for ds in datasets:
+        results[ds] = sweep(ds, runs, epochs, backend=backend)
+        end_of_sweep(backend)
     import os
 
     os.makedirs("results", exist_ok=True)

@@ -176,11 +176,39 @@ def bench_delaysim(full: bool, out_path: str = "BENCH_delaysim.json"):
     return out
 
 
+def bench_serve(full: bool, out_path: str = "BENCH_serve.json"):
+    """Continuous batching vs the lockstep serve loop on a staggered-arrival
+    workload (benchmarks/serve_bench.py). Headline: aggregate tok/s ratio."""
+    import json
+
+    from benchmarks.serve_bench import run
+
+    n_req, gen_max = (48, 96) if full else (24, 64)
+    out, us = _timed(lambda: run(n_requests=n_req, gen_max=gen_max, verbose=False))
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    c, l = out["continuous"], out["lockstep"]
+    print(f"serve_continuous_vs_lockstep,{us:.0f},"
+          f"speedup={out['speedup_tokens_per_s']:.2f}x;"
+          f"cont_tok_s={c['tokens_per_s']:.1f};lock_tok_s={l['tokens_per_s']:.1f};"
+          f"cont_occ={c['occupancy']:.2f};lock_occ={l['occupancy']:.2f};"
+          f"steps={c['decode_steps']}v{l['decode_steps']}")
+    return out
+
+
+def _clear_jit_runners():
+    """Release the delay-sim jit-runner cache between benchmarks so one
+    workload's compiles don't stay pinned through the next."""
+    from benchmarks.sweep_util import end_of_sweep
+
+    end_of_sweep("scan")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper protocol (30x50)")
     ap.add_argument("--only", default="",
-                    help="comma list: tables,variants,rho,progression,roofline,kernels,scale,delaysim")
+                    help="comma list: tables,variants,rho,progression,roofline,kernels,scale,delaysim,serve")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -189,12 +217,16 @@ def main() -> None:
 
     if want("tables"):
         bench_tables(args.full)
+        _clear_jit_runners()
     if want("variants"):
         bench_variant_tables(args.full)
+        _clear_jit_runners()
     if want("rho"):
         bench_rho_sweep(args.full)
+        _clear_jit_runners()
     if want("progression"):
         bench_progression(args.full)
+        _clear_jit_runners()
     if want("roofline"):
         bench_roofline()
     if want("scale"):
@@ -203,6 +235,9 @@ def main() -> None:
         bench_kernels()
     if want("delaysim"):
         bench_delaysim(args.full)
+        _clear_jit_runners()
+    if want("serve"):
+        bench_serve(args.full)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,12 @@
+"""Shared benchmark helpers."""
+
+
+def end_of_sweep(backend: str = "scan") -> None:
+    """Release the delay-sim jit-runner LRU at a sweep boundary: the next
+    sweep's shapes differ, so its compiles can't be reused — drop them instead
+    of carrying them. No-op (and jax-import-free) on the numpy sim backend."""
+    if backend != "scan":
+        return
+    from repro.engine.delaysim import clear_runners
+
+    clear_runners()

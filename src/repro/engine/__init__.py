@@ -38,6 +38,7 @@ _LAZY = {
     "init_train_state": "mesh",
     "resolve_strategy": "mesh",
     "TOPOLOGY_SAMPLERS": "delaysim",
+    "clear_runners": "delaysim",
 }
 
 

@@ -31,6 +31,7 @@ stays as the reference). Everything runs in float64 via a scoped enable_x64
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from contextlib import nullcontext
 
 import numpy as np
@@ -118,13 +119,28 @@ def _shim_state(i, Wf, prev_avg, c: int):
                        prev_avg_loss=prev_avg, w_stale=Wf, opt_state=(), extra=())
 
 
-_RUNNERS: dict = {}
+# Bounded LRU of jitted runners. Every distinct (shapes, strategy, config)
+# key pins a compiled executable; an unbounded dict made long parameter
+# sweeps (rho/k ablations, multi-dataset tables) leak one compile per
+# configuration forever. 8 keeps the warm-reuse benefit within a sweep while
+# bounding the pinned-compile footprint; benchmarks additionally call
+# clear_runners() between sweeps.
+_RUNNERS: OrderedDict = OrderedDict()
+_RUNNERS_MAX = 8
+
+
+def clear_runners() -> None:
+    """Drop every cached jitted runner (and its pinned compiled executable).
+    Benchmarks call this between sweeps so one workload's compiles don't stay
+    resident through the next."""
+    _RUNNERS.clear()
 
 
 def _build_runner(key, strategy: DelayCompensator, T: int, n_classes: int,
                   R: int, rho: int, c: int, optimizer: str, fused_dc: bool):
-    """Compile (cached) the vmapped scan for one static configuration."""
+    """Compile (LRU-cached) the vmapped scan for one static configuration."""
     if key in _RUNNERS:
+        _RUNNERS.move_to_end(key)
         return _RUNNERS[key]
     guided = strategy.sim_guided
 
@@ -186,6 +202,8 @@ def _build_runner(key, strategy: DelayCompensator, T: int, n_classes: int,
 
     fn = jax.jit(jax.vmap(one_seed, in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, None, None)))
     _RUNNERS[key] = fn
+    while len(_RUNNERS) > _RUNNERS_MAX:
+        _RUNNERS.popitem(last=False)
     return fn
 
 
@@ -218,7 +236,17 @@ def run(spec: ExperimentSpec, X, y, n_classes: int, Xtest=None, ytest=None,
     ]
     schedules = [p[3] for p in preps]
     T = schedules[0].n_steps
-    assert all(s.n_steps == T for s in schedules), "seeds disagree on arrival count"
+    if not all(s.n_steps == T for s in schedules):
+        # a real exception, not an assert: this guards the vmapped stacking of
+        # per-seed arrival tables and must survive `python -O`
+        counts = {spec.seed + i: s.n_steps for i, s in enumerate(schedules)}
+        raise ValueError(
+            f"seeds disagree on arrival count under mode={spec.mode!r} "
+            f"topology={spec.resolved_topology!r} epochs={spec.epochs} "
+            f"batch_size={spec.batch_size}: per-seed n_steps {counts}; the "
+            f"scan backend needs equal-length schedules to vmap "
+            f"n_seeds={spec.n_seeds} (run seeds separately or use backend='sim')"
+        )
     if T == 0:
         # n_train < batch_size yields zero arrivals; mirror train_ps (which
         # returns the untouched init) instead of tracing an empty scan

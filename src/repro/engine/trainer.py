@@ -178,7 +178,15 @@ class Trainer:
             raise ValueError(spec.schedule)
 
         c = spec.workers or max(ctx.n_workers, 1)
-        assert spec.global_batch % c == 0, (spec.global_batch, c)
+        if spec.global_batch % c != 0:
+            # a real exception, not an assert (asserts vanish under python -O):
+            # per-worker losses need equal data shards
+            raise ValueError(
+                f"spec.global_batch={spec.global_batch} is not divisible by the "
+                f"worker count c={c} (spec.workers={spec.workers}, mesh "
+                f"{spec.mesh!r} provides {ctx.n_workers} data shards); the "
+                f"per-worker loss reshape needs equal shards — adjust "
+                f"spec.global_batch or spec.workers")
         key = jax.random.PRNGKey(spec.seed)
         params, logical, gstate = M.init_train_state(
             key, cfg, gcfg, opt, n_workers=c, strategy=self.strategy

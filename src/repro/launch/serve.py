@@ -1,40 +1,53 @@
-"""Serving launcher: batched prefill + decode loop.
+"""Serving launcher: thin client over the continuous-batching ServeEngine.
 
-Serves a (reduced or full) model with a batch of synthetic requests:
-prefill the prompts, then decode N tokens autoregressively with the
-(ring-buffer / recurrent-state) caches. On TPU meshes the KV cache sequence
-dim is sharded over `model` and attention uses the distributed flash-decode.
+Submits a batch of synthetic requests to `repro.serve.ServeEngine` (slot pool
++ persistent ring-buffer KV caches + per-slot decode positions, DESIGN.md §7)
+and prints per-request streams plus aggregate throughput. `--stagger` varies
+prompt and generation lengths across requests so slot recycling is visible;
+`--lockstep` runs the fixed-batch barriered baseline instead.
+
+Sampling is real now: `--sampling greedy|temperature|topk` (+ `--temperature`,
+`--top-k`) replaces the old dead `--greedy` flag (which was
+action="store_true" with default=True — impossible to disable, and no sampler
+existed behind it).
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
-      --batch 4 --prompt-len 64 --gen 32
+      --batch 4 --requests 8 --prompt-len 64 --gen 32 --stagger \
+      --sampling topk --top-k 40 --temperature 0.8
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.engine import build_ctx  # shared mesh-kind -> ShardCtx resolution
 from repro.models import transformer as T
 from repro.models.module import split_params
-from repro.data import make_batch_for
-from repro.train import steps as S
+from repro.serve import Request, SamplingParams, ServeEngine, lockstep_generate
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4, help="engine slot-pool size")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="number of requests (default: --batch)")
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--stagger", action="store_true",
+                    help="heterogeneous prompt/gen lengths across requests")
     ap.add_argument("--mesh", default="local")
-    ap.add_argument("--greedy", action="store_true", default=True)
+    ap.add_argument("--sampling", choices=("greedy", "temperature", "topk"),
+                    default="greedy")
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--top-k", type=int, default=40)
+    ap.add_argument("--lockstep", action="store_true",
+                    help="run the fixed-batch barriered baseline instead")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -45,38 +58,48 @@ def main(argv=None):
         raise SystemExit(f"{cfg.name} is encoder-only; no decode (see DESIGN.md §5)")
     ctx = build_ctx(args.mesh)
 
-    key = jax.random.PRNGKey(args.seed)
-    params = jax.tree.map(lambda p: p, split_params(T.model_init(key, cfg))[0])
+    params = split_params(T.model_init(jax.random.PRNGKey(args.seed), cfg))[0]
 
-    total = args.prompt_len + args.gen
-    batch = make_batch_for(cfg, args.prompt_len, args.batch, seed=args.seed)
-    batch = {k: jnp.asarray(v) for k, v in batch.items() if k in ("tokens", "patches")}
+    n_req = args.requests or args.batch
+    rng = np.random.default_rng(args.seed)
+    # vlm archs splice per-request image-patch embeddings into the prompt
+    # (lockstep baseline is token-only, like the engine's decode path)
+    n_patches = cfg.n_patches if cfg.arch_type == "vlm" and not args.lockstep else 0
+    min_len = max(1, n_patches + 2)
+    reqs = []
+    max_prompt = 0
+    for i in range(n_req):
+        if args.stagger:
+            L = int(rng.integers(max(1, args.prompt_len // 4), args.prompt_len + 1))
+            gen = int(rng.integers(max(1, args.gen // 4), args.gen + 1))
+        else:
+            L, gen = args.prompt_len, args.gen
+        L = max(L, min_len)
+        max_prompt = max(max_prompt, L)
+        sp = SamplingParams(method=args.sampling, temperature=args.temperature,
+                            top_k=args.top_k, seed=args.seed + i)
+        prompt = rng.integers(0, cfg.vocab_size, (L,)).tolist()
+        patches = (rng.standard_normal((n_patches, cfg.d_model)).astype(np.float32)
+                   if n_patches else None)
+        reqs.append(Request(prompt, max_new_tokens=gen, sampling=sp, patches=patches))
 
-    prefill = jax.jit(lambda p, b: T.prefill(p, b, cfg, ctx, total_len=total))
-    decode = jax.jit(S.build_decode_step(cfg, ctx), donate_argnums=(1,))
+    max_len = max(args.prompt_len, max_prompt) + args.gen
+    engine = ServeEngine(params, cfg, ctx, max_batch=args.batch, max_len=max_len)
 
-    t0 = time.time()
-    # prefill fills caches sized for the whole conversation (prompt + gen)
-    last_logits, caches = prefill(params, batch)
-    t_prefill = time.time() - t0
+    if args.lockstep:
+        comps, stats = lockstep_generate(engine, reqs)
+    else:
+        comps = engine.run(reqs)
+        stats = engine.stats()
 
-    tok = jnp.argmax(last_logits, -1)[:, None].astype(jnp.int32)
-    out_tokens = [tok]
-    t1 = time.time()
-    for i in range(args.gen - 1):
-        logits, caches = decode(params, caches, tok, jnp.asarray(args.prompt_len + i, jnp.int32))
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t1
-
-    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
-    tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
-    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.2f}s")
-    print(f"decode:  {args.gen-1} steps in {t_decode:.2f}s ({tps:.1f} tok/s)")
-    for b in range(min(args.batch, 2)):
-        print(f"  request {b}: {gen[b][:16].tolist()}...")
-    return gen
+    print(f"prefill: {stats.get('prefill_calls', len(comps))} calls, "
+          f"pool={args.batch} slots, max_len={max_len}")
+    print(f"decode:  {stats['decode_steps']} steps in {stats['wall_s']:.2f}s "
+          f"({stats['tokens_per_s']:.1f} tok/s, occupancy {stats['occupancy']:.2f})")
+    for c in sorted(comps, key=lambda c: c.request_id)[:2]:
+        print(f"  request {c.request_id} ({c.prompt_len}+{c.new_tokens}, "
+              f"{c.finish_reason}): {c.tokens[:16]}...")
+    return comps
 
 
 if __name__ == "__main__":

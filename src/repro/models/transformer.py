@@ -253,7 +253,9 @@ def layer_apply(lp, x, cfg, ctx, i, positions, cache=None, t=None):
     if mk == "attn":
         h = L.rmsnorm(x, lp["norm1"], cfg.norm_eps)
         if cache is not None and t is not None:
-            # decode: one token against the cache
+            # decode: one token per request against the cache. t is a (B,)
+            # per-slot position vector (a scalar is broadcast by decode_step),
+            # so requests at different depths share one jitted step.
             B, S, d = h.shape
             H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
             q = (h @ lp["mixer"]["wq"]).reshape(B, S, H, dh)
@@ -262,29 +264,30 @@ def layer_apply(lp, x, cfg, ctx, i, positions, cache=None, t=None):
             q = L.apply_rope(q, positions, cfg.rope_theta)
             k = L.apply_rope(k, positions, cfg.rope_theta)
             s_c = cache["k"].shape[1]
-            slot = jnp.mod(t, s_c)
+            slot = jnp.mod(t, s_c)  # (B,) per-request ring-buffer slots
+            rows = jnp.arange(B)
             if cfg.kv_cache_dtype == "int8":
                 from repro.models.kvquant import dequantize_kv, quantize_kv
 
                 kq, ks = quantize_kv(k)
                 vq, vs = quantize_kv(v)
-                k_cache = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
-                v_cache = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
-                ks_cache = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0))
-                vs_cache = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
+                k_cache = cache["k"].at[rows, slot].set(kq[:, 0])
+                v_cache = cache["v"].at[rows, slot].set(vq[:, 0])
+                ks_cache = cache["k_scale"].at[rows, slot].set(ks[:, 0])
+                vs_cache = cache["v_scale"].at[rows, slot].set(vs[:, 0])
                 k_full = dequantize_kv(k_cache, ks_cache, cfg.dtype)
                 v_full = dequantize_kv(v_cache, vs_cache, cfg.dtype)
                 # this step's attention reads the current token's exact k/v
                 # (the int8 copy only pays its quantization cost from t+1 on)
-                k_full = jax.lax.dynamic_update_slice(k_full, k.astype(cfg.dtype), (0, slot, 0, 0))
-                v_full = jax.lax.dynamic_update_slice(v_full, v.astype(cfg.dtype), (0, slot, 0, 0))
+                k_full = k_full.at[rows, slot].set(k[:, 0].astype(cfg.dtype))
+                v_full = v_full.at[rows, slot].set(v[:, 0].astype(cfg.dtype))
                 new_cache = {"k": k_cache, "v": v_cache, "k_scale": ks_cache, "v_scale": vs_cache}
             else:
-                k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-                v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+                k_cache = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+                v_cache = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
                 k_full, v_full = k_cache, v_cache
                 new_cache = {"k": k_cache, "v": v_cache}
-            clen = jnp.full((B,), t + 1, jnp.int32)
+            clen = (t + 1).astype(jnp.int32)
             out = sharded_decode_attention(q, k_full, v_full, clen, cfg, ctx)
             att = out.reshape(B, S, H * dh) @ lp["mixer"]["wo"]
         else:
@@ -451,26 +454,43 @@ def forward_train(params, batch, cfg, ctx: ShardCtx = LOCAL_CTX):
     return per_ex, aux, logits
 
 
-def prefill(params, batch, cfg, ctx: ShardCtx = LOCAL_CTX, total_len: int = 0):
+def prefill(params, batch, cfg, ctx: ShardCtx = LOCAL_CTX, total_len: int = 0,
+            prompt_lens=None):
     """Returns (last-position logits (B,V), caches). Caches are sized for
-    `total_len` (>= prompt length) so decode can continue in place."""
+    `total_len` (>= prompt length) so decode can continue in place.
+
+    `prompt_lens` ((B,) int32, optional) supports right-padded prompts: logits
+    are gathered at each row's last *real* position (prompt_lens-1) instead of
+    the last padded one. Padded KV slots hold junk, but causal masking keeps
+    real-token activations exact and decode overwrites slot t exactly when it
+    first becomes visible (clen = t+1) — see DESIGN.md §7 for the arch classes
+    where this is sound (recurrent state integrates pad junk; windows wrap)."""
     x = _embed_inputs(params, batch, cfg)
     B, S = x.shape[:2]
     positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
     caches = init_caches(cfg, B, max(total_len, S))
     x, _, caches = _stack_scan(params, x, cfg, ctx, positions, caches=caches)
-    logits = _head(params, x[:, -1:], cfg)
+    if prompt_lens is None:
+        x_last = x[:, -1:]
+    else:
+        idx = jnp.clip(jnp.asarray(prompt_lens, jnp.int32) - 1, 0, S - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    logits = _head(params, x_last, cfg)
     return logits[:, 0], caches
 
 
 def decode_step(params, caches, tokens, t, cfg, ctx: ShardCtx = LOCAL_CTX):
-    """tokens: (B,1) int32 (or (B,1,d) frames); t: scalar position. Returns
-    (logits (B,V), new caches)."""
+    """tokens: (B,1) int32 (or (B,1,d) frames); t: scalar position shared by
+    the batch, or a (B,) per-request position vector (continuous batching:
+    every slot advances at its own depth). Returns (logits (B,V), new caches)."""
     if cfg.audio_frontend:
         raise ValueError(f"{cfg.name} is encoder-only: no decode step")
     x = L.embed_lookup(params["embed"], tokens).astype(cfg.dtype)
     B = x.shape[0]
-    positions = jnp.broadcast_to(jnp.asarray(t, jnp.int32)[None, None], (B, 1))
-    x, _, caches = _stack_scan(params, x, cfg, ctx, positions, caches=caches, t=t)
+    tv = jnp.asarray(t, jnp.int32)
+    if tv.ndim == 0:
+        tv = jnp.broadcast_to(tv, (B,))
+    positions = tv[:, None]
+    x, _, caches = _stack_scan(params, x, cfg, ctx, positions, caches=caches, t=tv)
     logits = _head(params, x, cfg)
     return logits[:, 0], caches

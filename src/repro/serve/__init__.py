@@ -1,0 +1,21 @@
+"""repro.serve — continuous-batching serving engine (DESIGN.md §7).
+
+    from repro.serve import Request, SamplingParams, ServeEngine
+
+    engine = ServeEngine(params, cfg, max_batch=4, max_len=256)
+    engine.submit(Request(prompt, max_new_tokens=32,
+                          sampling=SamplingParams(method="topk", top_k=40,
+                                                  temperature=0.8, seed=1)))
+    completions = engine.run()
+    engine.stats()["tokens_per_s"]
+
+`lockstep_generate` is the fixed-batch barriered baseline the engine
+replaces, kept for benchmarks and parity tests.
+"""
+from repro.serve.engine import (  # noqa: F401
+    Completion,
+    Request,
+    ServeEngine,
+    lockstep_generate,
+)
+from repro.serve.sampling import SAMPLING_METHODS, SamplingParams, sample_tokens  # noqa: F401

@@ -1,0 +1,518 @@
+"""Continuous-batching serve engine (DESIGN.md §7).
+
+The lockstep loop this replaces barriers every request on the slowest member
+of a fixed batch: one shared prompt length, one shared decode position, no
+slot reuse. The paper's core point — never let the slowest participant
+serialize everyone; treat heterogeneous arrival delays as first-class — maps
+onto serving directly: requests arrive staggered and should be admitted and
+retired continuously.
+
+`ServeEngine` owns a queue and a fixed pool of `max_batch` slots backed by ONE
+persistent cache allocation (`T.init_caches(cfg, max_batch, max_len)`):
+
+* every engine step advances ALL active slots with one jitted `decode_step`
+  carrying a per-slot position vector `t: (B,)` (models/transformer.py) — a
+  request at position 70 and one at position 9 share the same call;
+* a finished slot (EOS / max_new_tokens) is freed immediately and the next
+  queued request's prefill is interleaved into the loop: a single-row prefill
+  (prompt right-padded to a power-of-two bucket where the arch allows it, so
+  compiles are shared across lengths) writes the slot's rows of the pool
+  caches in place (`dynamic_update_slice` on the batch axis);
+* sampling is per-request (greedy / temperature / top-k, own PRNG seed) in one
+  vmapped call over the pool (serve.sampling), with `on_token` streaming
+  callbacks and per-request latency + aggregate throughput metrics.
+
+`lockstep_generate` is the barriered baseline, kept as the measurable
+counterfactual (benchmarks/serve_bench.py) and the parity oracle for
+equal-length requests (tests/test_serve.py).
+
+Cross-slot isolation: attention, norms and dense/SwiGLU FFNs are row-
+independent, so a slot's tokens are unaffected by its neighbors (locked in by
+tests/test_serve.py::test_per_slot_decode_matches_sequential). MoE capacity
+routing is the one documented exception — expert capacity is computed over
+the whole pool, so under capacity pressure co-resident requests can perturb
+each other's routing (same property the lockstep loop had).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.serve.sampling import SamplingParams, sample_tokens
+from repro.sharding.rules import LOCAL_CTX, ShardCtx
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. `on_token(request_id, token)` streams tokens as
+    they are accepted (prefill's first token included). `patches` carries a
+    VLM request's precomputed image-patch embeddings ((n_patches, d_model)
+    f32, spliced over prompt positions 1..1+P at prefill — vlm archs only)."""
+
+    prompt: Sequence[int]
+    max_new_tokens: int = 16
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    on_token: Optional[Callable[[int, int], None]] = None
+    patches: Optional[np.ndarray] = None
+    request_id: Optional[int] = None  # assigned at submit() if None
+
+
+@dataclasses.dataclass
+class Completion:
+    """Result + latency record of one request."""
+
+    request_id: int
+    prompt_len: int
+    tokens: List[int]              # generated tokens (EOS included if hit)
+    finish_reason: str             # "eos" | "length"
+    slot: int
+    submitted_s: float             # perf_counter stamps
+    admitted_s: float
+    first_token_s: float
+    finished_s: float
+
+    @property
+    def new_tokens(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def ttft_s(self) -> float:
+        """Submit -> first token (queue wait + prefill)."""
+        return self.first_token_s - self.submitted_s
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_s - self.submitted_s
+
+
+@dataclasses.dataclass
+class _Active:
+    req: Request
+    slot: int
+    prompt_len: int
+    tokens: List[int]
+    submitted_s: float
+    admitted_s: float
+    first_token_s: float
+
+
+def _padded_prefill_ok(cfg) -> bool:
+    """Right-padded prompts are exact only when every layer is full causal
+    attention: recurrent state (ssm/xlstm/hybrid) integrates pad junk, sliding
+    windows let pads displace real tail tokens in the ring, and MoE capacity
+    counts pad tokens. Those archs prefill at exact length instead (one
+    compile per distinct prompt length)."""
+    return cfg.arch_type in ("dense", "vlm") and not cfg.sliding_window
+
+
+class ServeEngine:
+    """Continuous-batching serving over the prefill/decode + ring-buffer cache
+    machinery. See module docstring; typical use:
+
+        engine = ServeEngine(params, cfg, max_batch=4, max_len=256)
+        engine.submit(Request(prompt, max_new_tokens=32))
+        completions = engine.run()          # or step() under your own loop
+        engine.stats()["tokens_per_s"]
+    """
+
+    def __init__(self, params, cfg, ctx: ShardCtx = LOCAL_CTX, *,
+                 max_batch: int = 4, max_len: int = 256,
+                 eos_id: Optional[int] = None, min_prefill_bucket: int = 8):
+        if not cfg.supports_decode:
+            raise ValueError(f"{cfg.name} is encoder-only; nothing to serve")
+        if max_batch < 1 or max_len < 2:
+            raise ValueError(f"need max_batch >= 1 and max_len >= 2, "
+                             f"got {max_batch}, {max_len}")
+        self.params, self.cfg, self.ctx = params, cfg, ctx
+        self.max_batch, self.max_len, self.eos_id = max_batch, max_len, eos_id
+        self.min_prefill_bucket = min_prefill_bucket
+        self._padded = _padded_prefill_ok(cfg)
+
+        self.caches = T.init_caches(cfg, max_batch, max_len)
+
+        def step_impl(p, c, tok, t, keys, temp, topk):
+            # decode + sample fused into ONE dispatch per engine step: only the
+            # (B,) sampled tokens cross to host, never the (B, V) logits
+            logits, c = T.decode_step(p, c, tok, t, cfg, ctx)
+            toks, keys = sample_tokens(logits, keys, temp, topk)
+            return toks, keys, c
+
+        self._step = jax.jit(step_impl, donate_argnums=(1,))
+        self._prefills: dict = {}  # (batch, seq) -> jitted prefill+sample
+        self._admits: dict = {}    # seq -> jitted prefill+sample+pool-insert
+
+        B = max_batch
+        self.queue: "collections.deque[Request]" = collections.deque()
+        self.completions: List[Completion] = []
+        self._active: List[Optional[_Active]] = [None] * B
+        self._n_active = 0
+        self._tokens = np.zeros((B, 1), np.int32)
+        self._t = np.zeros((B,), np.int32)
+        self._keys = np.zeros((B, 2), np.uint32)
+        self._temp = np.zeros((B,), np.float32)
+        self._topk = np.zeros((B,), np.int32)
+        self._next_id = 0
+        self.reset_stats()
+
+    # ------------------------------------------------------------- plumbing
+
+    @staticmethod
+    def _insert_impl(pool, one, slot):
+        """Write a single-request cache tree into batch row `slot` of the pool
+        (every cache leaf is (n_super, batch, ...))."""
+        def ins(p, o):
+            idx = (0, slot.astype(jnp.int32)) + (0,) * (p.ndim - 2)
+            return jax.lax.dynamic_update_slice(p, o.astype(p.dtype), idx)
+
+        return jax.tree.map(ins, pool, one)
+
+    def bucket_len(self, prompt_len: int) -> int:
+        """Prefill compile bucket for a prompt length: next power of two where
+        padding is exact for the arch, the exact length otherwise."""
+        if not self._padded:
+            return prompt_len
+        b = max(self.min_prefill_bucket, 1 << (prompt_len - 1).bit_length())
+        return min(b, self.max_len)
+
+    def prefill_fn(self, batch: int, seq: int):
+        """Jitted prefill+first-token-sample for a (batch, seq) shape, cached
+        per engine; caches come back sized for the pool's max_len so rows slot
+        straight in. Returns (tokens (batch,), new_keys, caches)."""
+        key = (batch, seq)
+        if key not in self._prefills:
+            cfg, ctx, total = self.cfg, self.ctx, self.max_len
+
+            def fn(p, toks, lens, keys, temp, topk):
+                logits, caches = T.prefill(p, {"tokens": toks}, cfg, ctx,
+                                           total_len=total, prompt_lens=lens)
+                tok, keys = sample_tokens(logits, keys, temp, topk)
+                return tok, keys, caches
+
+            self._prefills[key] = jax.jit(fn)
+        return self._prefills[key]
+
+    def admit_fn(self, seq: int, n_patches: int = 0):
+        """Jitted single-request admission: prefill + first-token sample +
+        in-place pool-cache row insert, ONE dispatch per admitted request.
+        Returns (token (1,), new_keys (1,2), new pool caches). n_patches > 0
+        adds a VLM patch-embedding operand spliced by the prefill."""
+        key = (seq, n_patches)
+        if key not in self._admits:
+            cfg, ctx, total = self.cfg, self.ctx, self.max_len
+            insert = self._insert_impl
+
+            def fn(p, pool, toks, lens, keys, temp, topk, slot, patches=None):
+                batch = {"tokens": toks}
+                if patches is not None:
+                    batch["patches"] = patches
+                logits, one = T.prefill(p, batch, cfg, ctx,
+                                        total_len=total, prompt_lens=lens)
+                tok, keys = sample_tokens(logits, keys, temp, topk)
+                return tok, keys, insert(pool, one, slot)
+
+            self._admits[key] = jax.jit(fn, donate_argnums=(1,))
+        return self._admits[key]
+
+    # -------------------------------------------------------------- public
+
+    @property
+    def num_active(self) -> int:
+        return self._n_active
+
+    @property
+    def num_queued(self) -> int:
+        return len(self.queue)
+
+    @property
+    def has_work(self) -> bool:
+        return self._n_active > 0 or bool(self.queue)
+
+    def submit(self, req: Request) -> int:
+        """Queue a request; returns its request_id."""
+        L = len(req.prompt)
+        if L < 1:
+            raise ValueError("empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {req.max_new_tokens}")
+        if L + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt_len {L} + max_new_tokens {req.max_new_tokens} exceeds "
+                f"engine max_len {self.max_len}")
+        if req.patches is not None:
+            if self.cfg.arch_type != "vlm":
+                raise ValueError(
+                    f"patches passed to a {self.cfg.arch_type} arch "
+                    f"({self.cfg.name}); only vlm archs splice patch embeddings")
+            P = np.asarray(req.patches).shape[0]
+            if L < P + 2:
+                raise ValueError(
+                    f"vlm prompt_len {L} too short to splice {P} patches "
+                    f"(needs >= {P + 2}: BOS + patches + >=1 text token)")
+        if req.request_id is None:
+            req.request_id = self._next_id
+        self._next_id = max(self._next_id, req.request_id) + 1
+        req._submitted_s = time.perf_counter()
+        self.queue.append(req)
+        return req.request_id
+
+    def step(self) -> bool:
+        """One engine iteration: admit queued requests into free slots, then
+        advance every active slot one token. Returns False once drained.
+        Busy time accumulates into run_wall_s, so stats() is meaningful for
+        callers driving step() under their own loop (idle time between steps —
+        e.g. waiting for arrivals — is the caller's to account)."""
+        t0 = time.perf_counter()
+        self._admit()
+        if self._n_active == 0:
+            self.run_wall_s += time.perf_counter() - t0
+            return False
+        toks, keys, self.caches = self._step(
+            self.params, self.caches, jnp.asarray(self._tokens), jnp.asarray(self._t),
+            jnp.asarray(self._keys), jnp.asarray(self._temp), jnp.asarray(self._topk))
+        toks = np.asarray(toks)
+        self._keys = np.array(keys)  # copy: jax->np views are read-only
+        self.decode_steps += 1
+        self.slot_steps += self._n_active
+        for slot in range(self.max_batch):
+            st = self._active[slot]
+            if st is None:
+                continue
+            self._t[slot] += 1
+            self._accept(st, int(toks[slot]))
+        self.run_wall_s += time.perf_counter() - t0
+        return True
+
+    def run(self, requests: Optional[Sequence[Request]] = None) -> List[Completion]:
+        """Submit `requests` (if given) and drain the engine. Returns the
+        completions produced by this call, in finish order."""
+        for r in requests or ():
+            self.submit(r)
+        n0 = len(self.completions)
+        while self.step():
+            pass
+        return self.completions[n0:]
+
+    def reset_stats(self):
+        """Zero the aggregate counters (bench warmup); requires an idle engine."""
+        if self._n_active or self.queue:
+            raise ValueError("reset_stats on a busy engine")
+        self.completions = []
+        self.decode_steps = 0
+        self.prefill_calls = 0
+        self.slot_steps = 0
+        self.run_wall_s = 0.0
+
+    def stats(self) -> dict:
+        """Aggregate throughput/latency over the completions so far."""
+        new_tokens = sum(c.new_tokens for c in self.completions)
+        out = {
+            "n_completed": len(self.completions),
+            "new_tokens": new_tokens,
+            "decode_steps": self.decode_steps,
+            "prefill_calls": self.prefill_calls,
+            "wall_s": self.run_wall_s,
+            "tokens_per_s": new_tokens / self.run_wall_s if self.run_wall_s else 0.0,
+            # useful fraction of the decode grid (active slots / B per step)
+            "occupancy": (self.slot_steps / (self.decode_steps * self.max_batch)
+                          if self.decode_steps else 0.0),
+        }
+        if self.completions:
+            out["mean_ttft_s"] = float(np.mean([c.ttft_s for c in self.completions]))
+            out["mean_latency_s"] = float(np.mean([c.latency_s for c in self.completions]))
+        return out
+
+    # ------------------------------------------------------------ internals
+
+    def _admit(self):
+        slot = 0
+        while self.queue:
+            while slot < self.max_batch and self._active[slot] is not None:
+                slot += 1
+            if slot == self.max_batch:
+                return
+            self._prefill_into(slot, self.queue.popleft())
+
+    def _prefill_into(self, slot: int, req: Request):
+        L = len(req.prompt)
+        Sb = self.bucket_len(L)
+        toks = np.zeros((1, Sb), np.int32)
+        toks[0, :L] = np.asarray(req.prompt, np.int32)
+        sp = req.sampling
+        key0 = jnp.asarray(jax.random.PRNGKey(sp.seed), jnp.uint32)
+        kw = {}
+        n_patches = 0
+        if req.patches is not None:
+            patches = np.asarray(req.patches, np.float32)
+            n_patches = patches.shape[0]
+            kw["patches"] = jnp.asarray(patches[None])
+        tok, k1, self.caches = self.admit_fn(Sb, n_patches)(
+            self.params, self.caches, jnp.asarray(toks), jnp.asarray([L], np.int32),
+            key0[None], jnp.asarray([sp.eff_temperature], np.float32),
+            jnp.asarray([sp.eff_top_k], np.int32), jnp.asarray(slot, jnp.int32),
+            **kw)
+        self.prefill_calls += 1
+        now = time.perf_counter()
+        st = _Active(req=req, slot=slot, prompt_len=L, tokens=[],
+                     submitted_s=getattr(req, "_submitted_s", now),
+                     admitted_s=now, first_token_s=now)
+        self._active[slot] = st
+        self._n_active += 1
+        self._t[slot] = L            # position of the first generated token
+        self._keys[slot] = np.asarray(k1[0])
+        self._temp[slot] = sp.eff_temperature
+        self._topk[slot] = sp.eff_top_k
+        self._accept(st, int(np.asarray(tok)[0]))
+
+    def _accept(self, st: _Active, tok: int):
+        if not st.tokens:
+            st.first_token_s = time.perf_counter()
+        st.tokens.append(tok)
+        self._tokens[st.slot, 0] = tok
+        if st.req.on_token is not None:
+            st.req.on_token(st.req.request_id, tok)
+        if self.eos_id is not None and tok == self.eos_id:
+            self._finish(st, "eos")
+        elif len(st.tokens) >= st.req.max_new_tokens:
+            self._finish(st, "length")
+
+    def _finish(self, st: _Active, reason: str):
+        self.completions.append(Completion(
+            request_id=st.req.request_id, prompt_len=st.prompt_len,
+            tokens=st.tokens, finish_reason=reason, slot=st.slot,
+            submitted_s=st.submitted_s, admitted_s=st.admitted_s,
+            first_token_s=st.first_token_s, finished_s=time.perf_counter()))
+        self._active[st.slot] = None
+        self._n_active -= 1
+        self._t[st.slot] = 0
+        self._tokens[st.slot, 0] = 0
+
+
+# ----------------------------------------------------------------- baseline
+
+
+def lockstep_generate(engine: ServeEngine, requests: Sequence[Request],
+                      arrival_s: Optional[Sequence[float]] = None,
+                      start_s: Optional[float] = None):
+    """The barriered baseline the engine replaces, kept measurable: requests
+    are grouped in submission order into fixed batches of `engine.max_batch`;
+    each batch waits for its SLOWEST member to arrive (`arrival_s`, seconds
+    relative to `start_s`), prefills together with prompts right-padded to the
+    batch max, then decodes with one shared position until the longest member
+    finishes — early-finished slots keep burning decode steps (tokens
+    discarded), and no slot is recycled mid-batch.
+
+    Reuses the engine's jitted decode/sampler (identical compiles and token
+    streams for equal-length greedy batches — the parity oracle in
+    tests/test_serve.py); the engine's own pool state is untouched.
+    Returns (completions, stats_dict).
+    """
+    if any(r.patches is not None for r in requests):
+        raise ValueError("lockstep_generate is token-only; vlm patch requests "
+                         "go through ServeEngine")
+    B = engine.max_batch
+    t0 = start_s if start_s is not None else time.perf_counter()
+    completions: List[Completion] = []
+    decode_steps = 0
+    slot_steps = 0
+    for g0 in range(0, len(requests), B):
+        group = list(requests[g0:g0 + B])
+        if arrival_s is not None:
+            barrier = max(arrival_s[g0:g0 + len(group)])
+            wait = barrier - (time.perf_counter() - t0)
+            if wait > 0:
+                time.sleep(wait)
+        sub_s = [
+            (t0 + arrival_s[g0 + i]) if arrival_s is not None
+            else getattr(r, "_submitted_s", t0)
+            for i, r in enumerate(group)
+        ]
+        admit_s = time.perf_counter()
+
+        Lmax = max(len(r.prompt) for r in group)
+        Sb = engine.bucket_len(Lmax)
+        toks = np.zeros((B, Sb), np.int32)
+        lens = np.ones((B,), np.int32)
+        temp = np.zeros((B,), np.float32)
+        topk = np.zeros((B,), np.int32)
+        keys = np.zeros((B, 2), np.uint32)
+        for i, r in enumerate(group):
+            toks[i, :len(r.prompt)] = np.asarray(r.prompt, np.int32)
+            lens[i] = len(r.prompt)
+            temp[i] = r.sampling.eff_temperature
+            topk[i] = r.sampling.eff_top_k
+            keys[i] = np.asarray(jax.random.PRNGKey(r.sampling.seed), np.uint32)
+
+        tok, keys_d, caches = engine.prefill_fn(B, Sb)(
+            engine.params, jnp.asarray(toks), jnp.asarray(lens),
+            jnp.asarray(keys), jnp.asarray(temp), jnp.asarray(topk))
+        tok = np.asarray(tok)
+        out = [[] for _ in group]
+        done = [False] * len(group)
+        first_s = [0.0] * len(group)
+        finish_s = [0.0] * len(group)
+        reason = ["length"] * len(group)
+
+        def accept(i, tk):
+            if done[i]:
+                return
+            if not out[i]:
+                first_s[i] = time.perf_counter()
+            out[i].append(tk)
+            r = group[i]
+            if r.on_token is not None:
+                r.on_token(r.request_id if r.request_id is not None else g0 + i, tk)
+            if engine.eos_id is not None and tk == engine.eos_id:
+                done[i], reason[i] = True, "eos"
+            elif len(out[i]) >= r.max_new_tokens:
+                done[i] = True
+            if done[i]:
+                finish_s[i] = time.perf_counter()
+
+        for i in range(len(group)):
+            accept(i, int(tok[i]))
+        cur = np.zeros((B, 1), np.int32)
+        cur[:len(group), 0] = tok[:len(group)]
+        # one SHARED position for the whole batch: everyone decodes from the
+        # padded Lmax, and the batch runs until its last member finishes
+        t = Lmax
+        while not all(done):
+            slot_steps += sum(1 for d in done if not d)  # still-useful slots
+            tok, keys_d, caches = engine._step(
+                engine.params, caches, jnp.asarray(cur),
+                jnp.asarray(np.full((B,), t, np.int32)),
+                keys_d, jnp.asarray(temp), jnp.asarray(topk))
+            tok = np.asarray(tok)
+            decode_steps += 1
+            t += 1
+            for i in range(len(group)):
+                accept(i, int(tok[i]))
+            cur[:, 0] = tok
+
+        for i, r in enumerate(group):
+            completions.append(Completion(
+                request_id=r.request_id if r.request_id is not None else g0 + i,
+                prompt_len=len(r.prompt), tokens=out[i], finish_reason=reason[i],
+                slot=i, submitted_s=sub_s[i], admitted_s=admit_s,
+                first_token_s=first_s[i], finished_s=finish_s[i]))
+
+    wall = time.perf_counter() - t0
+    new_tokens = sum(c.new_tokens for c in completions)
+    stats = {
+        "n_completed": len(completions),
+        "new_tokens": new_tokens,
+        "decode_steps": decode_steps,
+        "wall_s": wall,
+        "tokens_per_s": new_tokens / wall if wall else 0.0,
+        "occupancy": slot_steps / (decode_steps * B) if decode_steps else 0.0,
+    }
+    if completions:
+        stats["mean_ttft_s"] = float(np.mean([c.ttft_s for c in completions]))
+        stats["mean_latency_s"] = float(np.mean([c.latency_s for c in completions]))
+    return completions, stats

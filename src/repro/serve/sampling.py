@@ -1,0 +1,85 @@
+"""Per-request token sampling for the serve engine.
+
+One jit-able `sample_tokens` handles the whole slot pool in a single call:
+every row carries its own (temperature, top_k, PRNG key), so a greedy request,
+a temperature request and a top-k request can share one decode step. Greedy is
+temperature == 0 (selected with `jnp.where`, so the categorical draw for those
+rows is computed-and-discarded rather than branched — B is small at serve
+time and branches would break the single-compile property).
+
+Key protocol: each request starts from `PRNGKey(seed)`; every sampled token
+splits the row's key once and draws with the split half. The lockstep baseline
+follows the same protocol, so continuous-vs-lockstep parity holds for
+stochastic sampling too, not just greedy (tests/test_serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+SAMPLING_METHODS = ("greedy", "temperature", "topk")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    method: "greedy" | "temperature" | "topk". temperature applies to both
+    stochastic methods; top_k > 0 restricts the draw to the k highest logits
+    (required for method="topk"). seed is the per-request PRNG seed.
+    """
+
+    method: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.method not in SAMPLING_METHODS:
+            raise ValueError(
+                f"unknown sampling method {self.method!r}; known: {SAMPLING_METHODS}")
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.method == "topk" and self.top_k <= 0:
+            raise ValueError(f"method='topk' needs top_k > 0, got {self.top_k}")
+
+    @property
+    def eff_temperature(self) -> float:
+        """Temperature as the kernel sees it: 0 selects the greedy branch."""
+        return 0.0 if self.method == "greedy" else self.temperature
+
+    @property
+    def eff_top_k(self) -> int:
+        """top_k as the kernel sees it: 0 = full vocabulary."""
+        return self.top_k if self.method == "topk" else 0
+
+
+def _sample_one(logits, key, temperature, top_k):
+    """One row: logits (V,) -> token. temperature <= 0 is greedy; top_k <= 0
+    draws from the full vocabulary."""
+    V = logits.shape[-1]
+    lg = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lg).astype(jnp.int32)
+    # top-k: mask everything strictly below the k-th largest logit. k is a
+    # traced per-row value, so the threshold is a dynamic gather on the sorted
+    # logits rather than lax.top_k with a static k.
+    kth = jnp.sort(lg)[::-1][jnp.clip(top_k - 1, 0, V - 1)]
+    masked = jnp.where((top_k <= 0) | (lg >= kth), lg, -jnp.inf)
+    scaled = masked / jnp.maximum(temperature, 1e-6)
+    drawn = jax.random.categorical(key, scaled).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, drawn)
+
+
+def sample_tokens(logits, keys, temperature, top_k):
+    """Sample one token per pool slot.
+
+    logits (B, V); keys (B, 2) uint32; temperature (B,) f32; top_k (B,) int32.
+    Returns (tokens (B,) int32, new_keys (B, 2)): each row's key is split once
+    per call, the draw uses the subkey and the fresh key is handed back.
+    """
+    split = jax.vmap(jax.random.split)(keys)  # (B, 2, 2)
+    next_keys, use = split[:, 0], split[:, 1]
+    tokens = jax.vmap(_sample_one)(logits, use, temperature, top_k)
+    return tokens, next_keys

@@ -126,6 +126,8 @@ def build_train_step(cfg, gcfg: G.GuidedConfig, opt: Optimizer, ctx: ShardCtx, l
 
 
 def build_prefill_step(cfg, ctx: ShardCtx):
+    """Batched prompt prefill; pass total_len/prompt_lens through T.prefill
+    directly when serving variable-length prompts (repro.serve does)."""
     def prefill_step(params, batch):
         return T.prefill(params, batch, cfg, ctx)
 
@@ -133,6 +135,8 @@ def build_prefill_step(cfg, ctx: ShardCtx):
 
 
 def build_decode_step(cfg, ctx: ShardCtx):
+    """One decode step; `t` is a scalar shared position or a (B,) per-request
+    position vector (continuous batching — see repro.serve, DESIGN.md §7)."""
     def decode_step(params, caches, tokens, t):
         return T.decode_step(params, caches, tokens, t, cfg, ctx)
 

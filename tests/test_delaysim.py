@@ -278,3 +278,27 @@ def test_scan_rejects_missing_data():
 def test_trainer_resolves_scan_strategy_eagerly():
     with pytest.raises(KeyError, match="registered:"):
         Trainer.from_spec(ExperimentSpec(backend="scan", strategy="nope"))
+
+
+def test_runner_cache_is_a_bounded_lru(thyroid, monkeypatch):
+    """The jit-runner cache must stay bounded across parameter sweeps (it used
+    to pin one compile per distinct config forever) and be clearable."""
+    from repro.engine import delaysim
+
+    Xtr, ytr, k, Xte, yte = thyroid
+    delaysim.clear_runners()
+    assert len(delaysim._RUNNERS) == 0
+    monkeypatch.setattr(delaysim, "_RUNNERS_MAX", 1)
+    for rho in (2, 3):  # distinct rho -> distinct runner keys
+        spec = ExperimentSpec.for_algo("gSSGD", epochs=1, seed=0,
+                                       backend="scan").replace(rho=rho)
+        Trainer.from_spec(spec).fit((Xtr, ytr, k, Xte, yte))
+        # the bound is enforced on insert: never more than _RUNNERS_MAX pinned
+        assert len(delaysim._RUNNERS) == 1
+    delaysim.clear_runners()
+    assert len(delaysim._RUNNERS) == 0
+    # and a cleared cache still serves runs (recompiles on demand)
+    spec = ExperimentSpec.for_algo("gSSGD", epochs=1, seed=0, backend="scan")
+    rep = Trainer.from_spec(spec).fit((Xtr, ytr, k, Xte, yte))
+    assert np.isfinite(rep.final_loss)
+    assert len(delaysim._RUNNERS) == 1

@@ -272,3 +272,12 @@ def test_trainer_sim_backend_matches_train_ps():
     assert rep.test_accuracy == legacy["test_accuracy"]
     assert rep.val_loss == legacy["val_loss"]
     assert rep.history == legacy["history"]
+
+
+def test_mesh_global_batch_divisibility_is_a_real_exception():
+    """global_batch % workers != 0 must raise a ValueError naming the spec
+    fields (it was an assert, which vanishes under `python -O`)."""
+    spec = ExperimentSpec(backend="mesh", arch="minicpm_2b", reduced=True,
+                          steps=1, seq_len=8, global_batch=7, workers=2)
+    with pytest.raises(ValueError, match=r"global_batch=7.*c=2"):
+        Trainer.from_spec(spec).fit()
