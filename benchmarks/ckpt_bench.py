@@ -1,0 +1,133 @@
+"""Checkpoint-writer overhead: is the async snapshot path actually off the
+hot path?
+
+One jitted mesh train step (engine.mesh, guided_fused), three loops over the
+same batches with identical full-state snapshots every `every` steps:
+
+  * none  — no checkpointing (the floor);
+  * async — AsyncCheckpointer (device->host copy on the step boundary,
+            npz serialization + manifest + retention on the writer thread);
+  * sync  — save_train_state inline (the blocking baseline async replaces).
+
+Headline: mean step-time overhead vs the floor per checkpointed step; the
+acceptance bar is async << sync. First `warmup` steps (jit compile) dropped.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+
+def _build(steps: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.engine import ExperimentSpec, Trainer
+    from repro.engine import mesh as M
+    from repro.optim import for_run, get_optimizer
+
+    spec = ExperimentSpec(
+        backend="mesh", arch="yi_9b", reduced=True, mode="ssgd",
+        strategy="guided_fused", rho=4, lr=5e-2, seed=0, steps=steps,
+        seq_len=32, global_batch=8, workers=2)
+    cfg = spec.model_config()
+    gcfg = spec.to_guided_config()
+    opt = get_optimizer(spec.optimizer)
+    ctx = M.build_ctx("local")
+    strategy = Trainer.from_spec(spec).strategy
+    lr = for_run(spec.schedule, spec.lr, spec.warmup, steps)
+    step_fn = jax.jit(
+        M.build_train_step(cfg, gcfg, opt, ctx, lr, n_workers=2, strategy=strategy),
+        donate_argnums=(0, 1))
+
+    def init():
+        params, _, gstate = M.init_train_state(jax.random.PRNGKey(0), cfg, gcfg,
+                                               opt, n_workers=2, strategy=strategy)
+        return params, gstate
+
+    from repro.data import synthetic_lm_batches
+
+    gen = synthetic_lm_batches(cfg.vocab_size, spec.seq_len, spec.global_batch,
+                               seed=0, n_corpora=2)
+    batches = [{k: jnp.asarray(v) for k, v in next(gen).items()}
+               for _ in range(steps)]
+    return spec, step_fn, init, batches
+
+
+def _loop(step_fn, init, batches, save_hook=None, warmup: int = 2):
+    """Times each step; save_hook(done, params, gstate) runs ON the hot path
+    (exactly where the trainer snapshots), so its cost lands in the step time."""
+    params, gstate = init()
+    times = []
+    for i, batch in enumerate(batches):
+        t0 = time.perf_counter()
+        params, gstate, m = step_fn(params, gstate, batch)
+        float(m["loss"])  # host sync: the step really finished
+        if save_hook is not None:
+            save_hook(i + 1, params, gstate)
+        times.append(time.perf_counter() - t0)
+    return np.asarray(times[warmup:])
+
+
+def run(steps: int = 20, every: int = 2, verbose: bool = True) -> dict:
+    from repro import checkpoint as C
+
+    spec, step_fn, init, batches = _build(steps)
+    root = tempfile.mkdtemp(prefix="ckpt_bench_")
+    try:
+        t_none = _loop(step_fn, init, batches)
+
+        d = os.path.join(root, "async")
+        ck = C.AsyncCheckpointer(d, keep_last=2, meta=C.spec_meta(spec))
+
+        def async_save(done, params, gstate):
+            if done % every == 0:
+                ck.save(done, C.snapshot(params, gstate, done))
+
+        t_async = _loop(step_fn, init, batches, async_save)
+        ck.close()
+
+        d2 = os.path.join(root, "sync")
+
+        def sync_save(done, params, gstate):
+            if done % every == 0:
+                C.save_train_state(d2, done, C.snapshot(params, gstate, done),
+                                   meta=C.spec_meta(spec), keep_last=2)
+
+        t_sync = _loop(step_fn, init, batches, sync_save)
+
+        n_ckpts = max(1, sum(1 for s in range(3, steps + 1) if s % every == 0))
+        out = {
+            "protocol": {"steps": steps, "ckpt_every": every,
+                         "arch": "yi_9b(reduced)", "measured_steps": len(t_none),
+                         "snapshot": "full TrainState (params+gstate+cursor)"},
+            "mean_step_ms": {k: float(t.mean() * 1e3)
+                             for k, t in (("none", t_none), ("async", t_async),
+                                          ("sync", t_sync))},
+            "p90_step_ms": {k: float(np.percentile(t, 90) * 1e3)
+                            for k, t in (("none", t_none), ("async", t_async),
+                                         ("sync", t_sync))},
+            "overhead_ms_per_ckpt": {
+                "async": float((t_async.sum() - t_none.sum()) * 1e3 / n_ckpts),
+                "sync": float((t_sync.sum() - t_none.sum()) * 1e3 / n_ckpts),
+            },
+        }
+        a = out["overhead_ms_per_ckpt"]["async"]
+        s = out["overhead_ms_per_ckpt"]["sync"]
+        out["async_vs_sync_overhead_ratio"] = float(a / s) if s > 0 else 0.0
+        if verbose:
+            m = out["mean_step_ms"]
+            print(f"step ms: none={m['none']:.1f} async={m['async']:.1f} "
+                  f"sync={m['sync']:.1f}; overhead/ckpt: async={a:+.1f}ms "
+                  f"sync={s:+.1f}ms")
+        return out
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -10,9 +10,17 @@ CPU core; `--full` runs the paper's exact protocol (30 runs x 50 epochs).
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import numpy as np
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on sys.path;
+# the `from benchmarks.X import ...` imports below need the root
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 
 def _timed(fn):
@@ -154,7 +162,7 @@ def bench_delaysim(full: bool, out_path: str = "BENCH_delaysim.json"):
             "scan_wall_cold_s": t_cold,
             "scan_wall_warm_s": t_warm,
             "scan_steps_per_s": rep.steps_per_s,
-            "numpy_steps_per_s": len(rep.history) * runs / t_np,
+            "numpy_steps_per_s": rep.n_steps * runs / t_np,
             "speedup_warm": t_np / t_warm,
             "final_val_loss_numpy_mean": float(np.mean(finals_np)),
             "final_val_loss_scan_mean": float(finals_scan.mean()),
@@ -196,6 +204,27 @@ def bench_serve(full: bool, out_path: str = "BENCH_serve.json"):
     return out
 
 
+def bench_ckpt(full: bool, out_path: str = "BENCH_ckpt.json"):
+    """Async checkpoint-writer overhead vs inline saves (benchmarks/ckpt_bench).
+    Headline: step-time overhead per full-state snapshot, async vs sync."""
+    import json
+
+    from benchmarks.ckpt_bench import run
+
+    steps, every = (40, 4) if full else (20, 2)
+    out, us = _timed(lambda: run(steps=steps, every=every, verbose=False))
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    oh = out["overhead_ms_per_ckpt"]
+    m = out["mean_step_ms"]
+    print(f"ckpt_async_vs_sync,{us:.0f},"
+          f"overhead_per_ckpt_async={oh['async']:+.1f}ms;"
+          f"overhead_per_ckpt_sync={oh['sync']:+.1f}ms;"
+          f"step_none={m['none']:.1f}ms;step_async={m['async']:.1f}ms;"
+          f"step_sync={m['sync']:.1f}ms")
+    return out
+
+
 def _clear_jit_runners():
     """Release the delay-sim jit-runner cache between benchmarks so one
     workload's compiles don't stay pinned through the next."""
@@ -208,7 +237,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper protocol (30x50)")
     ap.add_argument("--only", default="",
-                    help="comma list: tables,variants,rho,progression,roofline,kernels,scale,delaysim,serve")
+                    help="comma list: tables,variants,rho,progression,roofline,"
+                         "kernels,scale,delaysim,serve,ckpt")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -238,6 +268,8 @@ def main() -> None:
         _clear_jit_runners()
     if want("serve"):
         bench_serve(args.full)
+    if want("ckpt"):
+        bench_ckpt(args.full)
 
 
 if __name__ == "__main__":

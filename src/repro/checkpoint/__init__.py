@@ -1,1 +1,21 @@
-from repro.checkpoint.npz import latest_step, restore, save  # noqa: F401
+"""Checkpointing: v1 npz pytree archives + the v2 full-state subsystem
+(TrainState snapshots, async manifest writer, resharding restore — DESIGN.md §8)."""
+from repro.checkpoint.npz import (  # noqa: F401
+    latest_step,
+    read_manifest,
+    restore,
+    save,
+)
+from repro.checkpoint.state import (  # noqa: F401
+    model_config_from_manifest,
+    restore_subtree,
+    restore_train_state,
+    snapshot,
+    spec_meta,
+    train_state_shardings,
+)
+from repro.checkpoint.writer import (  # noqa: F401
+    AsyncCheckpointer,
+    manifest_meta,
+    save_train_state,
+)

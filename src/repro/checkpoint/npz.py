@@ -5,15 +5,21 @@ rebuilds the tree and (optionally) re-places leaves onto a sharding tree via
 jax.device_put — so a checkpoint written on one mesh restores onto another
 (the standard resharding-restore pattern, at npz scale).
 
-Layout: <dir>/step_<N>.npz + <dir>/LATEST. Writes are atomic (tmp + rename).
+Layout: <dir>/step_<N>.npz. Which step is current is recorded by the
+MANIFEST.json written by `repro.checkpoint.writer` (atomic, with retention);
+`latest_step` also understands the v1 bare `LATEST` file so old checkpoint
+dirs keep restoring. Writes are atomic (tmp + rename).
 """
 from __future__ import annotations
 
+import json
 import os
 import tempfile
 
 import jax
 import numpy as np
+
+MANIFEST = "MANIFEST.json"
 
 
 def _flatten(tree):
@@ -23,28 +29,58 @@ def _flatten(tree):
         key = "/".join(str(p) for p in path)
         arr = leaf
         # numpy has no bfloat16: store as float32, restore() re-casts from the
-        # target tree's dtype
+        # target tree's dtype (bf16 -> f32 -> bf16 is exact: bf16 values are a
+        # subset of f32, so round-trips are bit-preserving)
         if hasattr(arr, "dtype") and arr.dtype == jax.numpy.bfloat16:
             arr = arr.astype(jax.numpy.float32)
         out[key] = np.asarray(arr)
     return out
 
 
-def save(ckpt_dir: str, step: int, tree) -> str:
+def step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+
+
+def write_archive(ckpt_dir: str, step: int, flat: dict) -> str:
+    """Atomically write an already-flattened {key: np.ndarray} archive."""
     os.makedirs(ckpt_dir, exist_ok=True)
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
-    flat = _flatten(tree)
+    path = step_path(ckpt_dir, step)
     fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
-    with os.fdopen(fd, "wb") as f:
-        np.savez(f, **flat)
-    os.replace(tmp, path)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    """Low-level synchronous save of one pytree (v1 API). Keeps writing the
+    legacy LATEST pointer; full-state training snapshots go through
+    `repro.checkpoint.writer` which maintains MANIFEST.json instead."""
+    path = write_archive(ckpt_dir, step, _flatten(tree))
     with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
         f.write(str(step))
     os.replace(os.path.join(ckpt_dir, "LATEST.tmp"), os.path.join(ckpt_dir, "LATEST"))
     return path
 
 
+def read_manifest(ckpt_dir: str) -> dict | None:
+    p = os.path.join(ckpt_dir, MANIFEST)
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
 def latest_step(ckpt_dir: str):
+    """Newest checkpointed step: MANIFEST.json when present (the v2 atomic
+    manifest), falling back to the v1 bare LATEST file. None if neither."""
+    man = read_manifest(ckpt_dir)
+    if man is not None:
+        return man.get("latest")
     p = os.path.join(ckpt_dir, "LATEST")
     if not os.path.exists(p):
         return None
@@ -52,16 +88,48 @@ def latest_step(ckpt_dir: str):
         return int(f.read().strip())
 
 
+def _mismatch_error(path: str, missing, unexpected, n_template: int, n_archive: int):
+    def fmt(keys):
+        keys = sorted(keys)
+        head = ", ".join(keys[:8])
+        return head + (f", ... ({len(keys)} total)" if len(keys) > 8 else "")
+
+    parts = [f"checkpoint {path} does not match the restore template "
+             f"({n_template} template leaves vs {n_archive} archived arrays)"]
+    if missing:
+        parts.append(f"missing from archive: {fmt(missing)}")
+    if unexpected:
+        parts.append(f"unexpected in archive: {fmt(unexpected)}")
+    parts.append("was this checkpoint written by a different model/strategy/"
+                 "optimizer configuration?")
+    return ValueError("; ".join(parts))
+
+
 def restore(ckpt_dir: str, step: int, tree_like, shardings=None):
     """Restore into the structure of `tree_like`. If `shardings` (a matching
-    tree of jax.sharding.Sharding) is given, leaves are device_put onto it."""
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tree of jax.sharding.Sharding) is given, leaves are device_put onto it.
+
+    Tree/archive mismatches raise ValueError naming the missing and
+    unexpected keys (not a bare KeyError), so a checkpoint written by a
+    different config fails with an actionable message."""
+    path = step_path(ckpt_dir, step)
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"no checkpoint archive at {path}")
     data = np.load(path)
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    keys = ["/".join(str(x) for x in p) for p, _ in flat]
+    archived = set(data.files)
+    missing = [k for k in keys if k not in archived]
+    unexpected = sorted(archived - set(keys))
+    if missing or unexpected:
+        raise _mismatch_error(path, missing, unexpected, len(keys), len(archived))
     leaves = []
-    for p, leaf in flat:
-        key = "/".join(str(x) for x in p)
+    for key, (p, leaf) in zip(keys, flat):
         arr = data[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint {path}: leaf {key!r} has shape {tuple(arr.shape)} "
+                f"but the restore template expects {tuple(leaf.shape)}")
         if hasattr(leaf, "dtype"):
             arr = arr.astype(leaf.dtype)
         leaves.append(arr)

@@ -1,0 +1,168 @@
+"""Async checkpoint writer: device->host on the step boundary, serialization
+off the hot path, atomic MANIFEST.json + retention.
+
+The training loop cannot afford to block on np.savez (compression + disk I/O)
+every ckpt_every steps, but it also cannot hand the writer live device
+buffers: the mesh step is jitted with donated arguments, so the arrays handed
+to a callback are reused by the *next* step's dispatch. `AsyncCheckpointer`
+therefore splits the save at exactly that boundary:
+
+  * `save(step, tree)` — caller thread — copies device->host (np.asarray per
+    leaf; this waits for the step's computation, which IS the step boundary,
+    then the transfer) and enqueues the flat host arrays;
+  * a single background thread serializes (atomic tmp+rename npz), updates
+    MANIFEST.json atomically, and prunes archives beyond `keep_last`.
+
+MANIFEST.json replaces the v1 bare `LATEST` file: one atomic JSON document
+recording every retained step with its file and metadata, so a reader never
+observes a pointer to a half-written archive and `latest_step` survives any
+kill point. Writer errors are captured and re-raised on the next
+save/wait/close — a full disk fails the run instead of silently dropping
+snapshots.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import tempfile
+import threading
+import time
+
+from repro.checkpoint.npz import MANIFEST, _flatten, read_manifest, step_path, write_archive
+
+
+def _write_manifest(ckpt_dir: str, man: dict) -> None:
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(man, f, indent=1)
+        os.replace(tmp, os.path.join(ckpt_dir, MANIFEST))
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def _update_manifest(ckpt_dir: str, step: int, fname: str, meta: dict,
+                     keep_last: int) -> None:
+    """Append/replace the entry for `step`, advance `latest`, prune beyond
+    `keep_last` (0 keeps everything). Called only from the writer thread (or
+    the sync path), so updates are serialized."""
+    man = read_manifest(ckpt_dir) or {"version": 2, "latest": None, "ckpts": []}
+    man["ckpts"] = [c for c in man["ckpts"] if c["step"] != step]
+    man["ckpts"].append({"step": step, "file": fname, "time": time.time(),
+                         "meta": meta})
+    man["ckpts"].sort(key=lambda c: c["step"])
+    pruned = []
+    if keep_last and len(man["ckpts"]) > keep_last:
+        pruned, man["ckpts"] = man["ckpts"][:-keep_last], man["ckpts"][-keep_last:]
+    man["latest"] = man["ckpts"][-1]["step"]
+    _write_manifest(ckpt_dir, man)
+    for c in pruned:  # after the manifest no longer references them
+        try:
+            os.unlink(os.path.join(ckpt_dir, c["file"]))
+        except FileNotFoundError:
+            pass
+
+
+def manifest_meta(ckpt_dir: str, step=None) -> dict:
+    """Metadata recorded with `step` (default: the latest entry)."""
+    man = read_manifest(ckpt_dir)
+    if man is None or not man.get("ckpts"):
+        raise FileNotFoundError(f"no {MANIFEST} with entries in {ckpt_dir}")
+    if step is None:
+        step = man["latest"]
+    for c in man["ckpts"]:
+        if c["step"] == step:
+            return c.get("meta", {})
+    raise ValueError(f"step {step} not in {ckpt_dir}/{MANIFEST}: "
+                     f"retained steps {[c['step'] for c in man['ckpts']]}")
+
+
+def save_train_state(ckpt_dir: str, step: int, tree, meta: dict = None,
+                     keep_last: int = 0) -> str:
+    """Synchronous full-state save: archive + manifest in the caller's thread.
+    The blocking baseline the async writer is benchmarked against; also the
+    right call for one-off snapshots outside a training loop."""
+    path = write_archive(ckpt_dir, step, _flatten(tree))
+    _update_manifest(ckpt_dir, step, os.path.basename(path), dict(meta or {}),
+                     keep_last)
+    return path
+
+
+class AsyncCheckpointer:
+    """One writer thread + bounded handoff of host-side snapshots.
+
+        ckpt = AsyncCheckpointer(dir, keep_last=3, meta={...})
+        ckpt.save(step, snapshot(params, gstate, step))   # ~copy cost only
+        ...
+        ckpt.close()                                      # drain + join
+
+    `save` on a step already enqueued/written last is a no-op (the final save
+    at loop exit dedupes against the last periodic one). The queue depth of 2
+    bounds host memory to <= 3 snapshots in flight; if the disk can't keep up
+    the training loop backpressures rather than ballooning RAM.
+    """
+
+    def __init__(self, ckpt_dir: str, keep_last: int = 3, meta: dict = None):
+        self.ckpt_dir = ckpt_dir
+        self.keep_last = keep_last
+        self.meta = dict(meta or {})
+        os.makedirs(ckpt_dir, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._err: BaseException | None = None
+        self._last_step: int | None = None
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="ckpt-writer")
+        self._thread.start()
+
+    # ------------------------------------------------------------- caller side
+
+    def save(self, step: int, tree, block: bool = False) -> bool:
+        """Snapshot `tree` as `step`. Device->host happens here (caller
+        thread, step boundary); serialization happens on the writer thread.
+        Returns False when deduped (same step as the previous save)."""
+        self._raise_pending()
+        if step == self._last_step:
+            return False
+        flat = _flatten(tree)  # np.asarray per leaf: sync + copy off device
+        self._last_step = step
+        self._q.put((step, flat))
+        if block:
+            self.wait()
+        return True
+
+    def wait(self) -> None:
+        """Block until every enqueued snapshot is on disk."""
+        self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        """Drain, stop the writer thread, re-raise any pending write error."""
+        self._q.join()
+        self._q.put(None)
+        self._thread.join()
+        self._raise_pending()
+
+    def _raise_pending(self):
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise RuntimeError(
+                f"checkpoint writer failed for {self.ckpt_dir}") from err
+
+    # ------------------------------------------------------------- writer side
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                step, flat = item
+                path = write_archive(self.ckpt_dir, step, flat)
+                _update_manifest(self.ckpt_dir, step, os.path.basename(path),
+                                 self.meta, self.keep_last)
+            except BaseException as e:  # surfaced on the caller's next call
+                self._err = e
+            finally:
+                self._q.task_done()

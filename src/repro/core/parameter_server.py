@@ -244,6 +244,7 @@ def train_ps(X, y, n_classes: int, cfg: PSConfig, Xtest=None, ytest=None):
         "train_loss": model.loss(Xtr, ytr),
         "val_loss": model.loss(Xv, yv),
         "history": server.history,
+        "n_steps": server.t,  # actual server steps (authoritative throughput count)
         "model": model,
     }
     if Xtest is not None:

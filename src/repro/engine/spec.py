@@ -33,6 +33,11 @@ if TYPE_CHECKING:  # GuidedConfig lives in the jax stack; import it lazily so
 BACKENDS = ("mesh", "sim", "scan")
 MODES = ("seq", "ssgd", "asgd")
 
+# mesh-backend lr schedules; kept as a pure-python tuple (the resolver lives
+# in repro.optim.schedules.for_run, which imports jax) so the spec and the
+# launcher's argparse choices validate without the jax import cost.
+SCHEDULES = ("constant", "wsd", "cosine")
+
 # Delay topologies of the scan backend (repro.engine.delaysim registers the
 # matching schedule generators): name -> execution modes it is defined for.
 # seq/barrier are the deterministic topologies implied by those modes; the
@@ -128,10 +133,25 @@ class ExperimentSpec:
     dc_lambda: float = 0.04
     correction_scale: float = 1.0
     magnitude_weight: float = 0.1
+    # -------------------------------------------- checkpointing (mesh backend)
+    ckpt_dir: str = ""             # "" -> checkpointing off
+    ckpt_every: int = 0            # periodic full-state snapshot cadence (steps)
+    keep_last: int = 3             # manifest retention (0 -> keep everything)
 
     def __post_init__(self):
         assert self.backend in BACKENDS, self.backend
         assert self.mode in MODES, self.mode
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {self.schedule!r}; known: {', '.join(SCHEDULES)}")
+        if self.ckpt_every < 0 or self.keep_last < 0:
+            raise ValueError(
+                f"ckpt_every/keep_last must be >= 0 "
+                f"(got {self.ckpt_every}/{self.keep_last})")
+        if self.ckpt_every and not self.ckpt_dir:
+            raise ValueError(
+                f"ckpt_every={self.ckpt_every} needs ckpt_dir (where should "
+                f"the snapshots go?)")
         # strategy/mode compatibility fails here, at construction, with the
         # registry's message — not deep inside jit or mid-fit.
         why = _STALE_REQUIRED.get(self.strategy)

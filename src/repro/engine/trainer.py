@@ -48,6 +48,11 @@ class Report:
     state: Any = None          # mesh: final GuidedState
     wall_time_s: float = 0.0   # wall time of fit() (incl. jit compile)
     steps_per_s: float = 0.0   # server steps (x seeds on scan) per second
+    n_steps: int = 0           # server steps this fit actually ran (per seed);
+                               # from the schedule/server counter, NOT history
+                               # record count — resume/history granularity safe
+    start_step: int = 0        # mesh: step resumed from (0 = fresh run)
+    interrupted: bool = False  # mesh: SIGTERM cut the run short (state saved)
 
     @property
     def final_loss(self) -> Optional[float]:
@@ -93,7 +98,8 @@ class Trainer:
 
     # ------------------------------------------------------------------ fit
     def fit(self, data=None, steps: Optional[int] = None,
-            on_step: Optional[Callable] = None, keep_history: bool = True) -> Report:
+            on_step: Optional[Callable] = None, keep_history: bool = True,
+            resume: bool = False) -> Report:
         """Run the experiment.
 
         sim backend: `data` is (X, y, n_classes[, Xtest, ytest]).
@@ -109,6 +115,18 @@ class Trainer:
         blocks on device->host transfers; long launcher runs that keep their
         own log-step records pass keep_history=False to retain (and sync)
         only the final step.
+
+        Checkpointing (mesh backend, DESIGN.md §8): spec.ckpt_dir enables
+        full-state snapshots — params AND GuidedState (opt state, consistency
+        scores, w_stale ring, strategy extra, step) plus the data-stream
+        cursor — written asynchronously every spec.ckpt_every steps and once
+        at loop exit (SIGTERM included: the handler finishes the in-flight
+        step, snapshots, and returns with Report.interrupted=True).
+        resume=True restarts from the latest manifest entry in spec.ckpt_dir
+        bit-exactly: train(N) == train(k) + resume(N-k), leaf for leaf (a
+        missing/empty ckpt_dir starts fresh). When resuming with an explicit
+        `data` iterable, the already-consumed prefix is skipped — pass the
+        same stream an uninterrupted run would have seen.
         """
         t0 = time.perf_counter()
         if self.spec.backend in ("sim", "scan"):
@@ -117,14 +135,19 @@ class Trainer:
                     "steps/on_step apply to the mesh backend; the sim/scan "
                     "backends run the paper's epoch protocol (set spec.epochs)"
                 )
+            if resume:
+                raise ValueError(
+                    "resume applies to the mesh backend; sim/scan runs are "
+                    "single jit/process calls with nothing to resume into"
+                )
             report = (self._fit_sim(data) if self.spec.backend == "sim"
                       else self._fit_scan(data))
-            n_steps = len(report.history) * self.spec.n_seeds
+            n_total = report.n_steps * self.spec.n_seeds
         else:
-            report = self._fit_mesh(data, steps, on_step, keep_history)
-            n_steps = steps or self.spec.steps
+            report = self._fit_mesh(data, steps, on_step, keep_history, resume)
+            n_total = report.n_steps
         report.wall_time_s = time.perf_counter() - t0
-        report.steps_per_s = n_steps / max(report.wall_time_s, 1e-9)
+        report.steps_per_s = n_total / max(report.wall_time_s, 1e-9)
         return report
 
     def _fit_sim(self, data) -> Report:
@@ -137,7 +160,8 @@ class Trainer:
         res = train_ps(X, y, n_classes, self.spec.to_ps_config(), Xtest, ytest)
         final = {k: res[k] for k in ("train_loss", "val_loss", "test_accuracy") if k in res}
         return Report(backend="sim", spec=self.spec, history=res["history"],
-                      final=final, model=res["model"])
+                      final=final, model=res["model"],
+                      n_steps=res.get("n_steps", len(res["history"])))
 
     def _fit_scan(self, data) -> Report:
         """The jitted lax.scan delay simulator (repro.engine.delaysim): same
@@ -153,14 +177,20 @@ class Trainer:
                            strategy=self.strategy)
         final = {k: res[k] for k in ("train_loss", "val_loss", "test_accuracy") if k in res}
         return Report(backend="scan", spec=self.spec, history=res["history"],
-                      final=final, model=res["model"])
+                      final=final, model=res["model"],
+                      n_steps=res.get("n_steps", len(res["history"])))
 
-    def _fit_mesh(self, data, steps, on_step, keep_history=True) -> Report:
+    def _fit_mesh(self, data, steps, on_step, keep_history=True, resume=False) -> Report:
+        import signal
+        import threading
+
         import jax
         import jax.numpy as jnp
+        import numpy as np
 
+        from repro import checkpoint as C
         from repro.engine import mesh as M
-        from repro.optim import constant, cosine, get_optimizer, wsd
+        from repro.optim import for_run, get_optimizer
 
         spec = self.spec
         n_steps = steps or spec.steps
@@ -168,14 +198,9 @@ class Trainer:
         ctx = M.build_ctx(spec.mesh)
         gcfg = spec.to_guided_config()
         opt = get_optimizer(spec.optimizer)
-        if spec.schedule == "constant":
-            lr = constant(spec.lr)
-        elif spec.schedule == "wsd":
-            lr = wsd(spec.lr, spec.warmup, n_steps // 2, n_steps // 2)
-        elif spec.schedule == "cosine":
-            lr = cosine(spec.lr, spec.warmup, n_steps)
-        else:
-            raise ValueError(spec.schedule)
+        # schedule phases partition n_steps (for_run); the wsd endpoint
+        # actually reaches final_frac before the run ends
+        lr = for_run(spec.schedule, spec.lr, spec.warmup, n_steps)
 
         c = spec.workers or max(ctx.n_workers, 1)
         if spec.global_batch % c != 0:
@@ -195,19 +220,104 @@ class Trainer:
                                      n_workers=c, strategy=self.strategy)
         step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
 
+        start_step = 0
+        if resume:
+            if not spec.ckpt_dir:
+                raise ValueError("fit(resume=True) needs spec.ckpt_dir to know "
+                                 "where the snapshots live")
+            latest = C.latest_step(spec.ckpt_dir)
+            if latest is not None:
+                # the freshly initialized state is the restore template: same
+                # treedef (incl. strategy extra / w_stale presence), so a
+                # checkpoint from a different config fails loudly, not subtly
+                template = C.snapshot(params, gstate, 0)
+                shardings = (C.train_state_shardings(ctx, logical, params, gstate)
+                             if ctx.distributed else None)
+                snap = C.restore_train_state(spec.ckpt_dir, latest, template,
+                                             shardings=shardings)
+                params, gstate = snap["params"], snap["gstate"]
+                if shardings is None:
+                    # commit host arrays to device so donation keeps working
+                    params = jax.tree.map(jnp.asarray, params)
+                    gstate = jax.tree.map(jnp.asarray, gstate)
+                start_step = int(np.asarray(snap["data"]["cursor"]))
+                if start_step > n_steps:
+                    raise ValueError(
+                        f"checkpoint at step {start_step} is past this run's "
+                        f"n_steps={n_steps}; nothing to resume")
+
+        # constructed only once resume validation passed: a failed restore
+        # must not strand the writer thread
+        ckpt = None
+        if spec.ckpt_dir:
+            ckpt = C.AsyncCheckpointer(spec.ckpt_dir, keep_last=spec.keep_last,
+                                       meta=C.spec_meta(spec))
+
         batches = iter(data) if data is not None else self._synthetic_batches(cfg, c)
+        for _ in range(start_step):  # replay the data cursor: same rng protocol,
+            next(batches)            # so resumed steps see the exact batches
+
+        # SIGTERM-safe: a preempted run finishes the in-flight step, snapshots
+        # full state, and exits cleanly instead of losing the window
+        stop = {"sig": None}
+        old_handler, installed = None, False
+        if ckpt is not None and threading.current_thread() is threading.main_thread():
+            def _on_term(signum, frame):
+                stop["sig"] = signum
+
+            try:
+                # the previous handler can legitimately be None (installed
+                # from C) — track installation separately so restore still runs
+                old_handler = signal.signal(signal.SIGTERM, _on_term)
+                installed = True
+            except (ValueError, AttributeError):  # non-main interpreter / platform
+                installed = False
 
         raw = []
         m = None
-        for step in range(n_steps):
-            batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
-            params, gstate, m = step_fn(params, gstate, batch)
-            if keep_history:
-                raw.append((step, m))
-            if on_step is not None:
-                on_step(step, m, params)
+        done = start_step
+        try:
+            for step in range(start_step, n_steps):
+                batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+                params, gstate, m = step_fn(params, gstate, batch)
+                done = step + 1
+                if keep_history:
+                    raw.append((step, m))
+                if on_step is not None:
+                    on_step(step, m, params)
+                if ckpt is not None and spec.ckpt_every and done % spec.ckpt_every == 0:
+                    # device->host copy here (step boundary, before the next
+                    # dispatch donates these buffers); serialization is async
+                    ckpt.save(done, C.snapshot(params, gstate, done))
+                if stop["sig"] is not None:
+                    break
+        finally:
+            if installed:
+                # a None previous handler (installed from C) cannot be
+                # re-registered through signal.signal; SIG_DFL beats leaving
+                # our dead closure swallowing every later SIGTERM
+                signal.signal(signal.SIGTERM,
+                              old_handler if old_handler is not None
+                              else signal.SIG_DFL)
+            if ckpt is not None:
+                import sys
+
+                loop_failed = sys.exc_info()[0] is not None
+                try:
+                    try:
+                        # final full-state snapshot (dedupes against a periodic
+                        # save that already covered `done`)
+                        if done > start_step or C.latest_step(spec.ckpt_dir) is None:
+                            ckpt.save(done, C.snapshot(params, gstate, done))
+                    finally:
+                        ckpt.close()  # drain + join even if the save failed
+                except Exception:
+                    # a training-loop exception outranks checkpoint teardown
+                    # noise; surface the writer error only on a clean loop
+                    if not loop_failed:
+                        raise
         if not keep_history and m is not None:
-            raw = [(n_steps - 1, m)]
+            raw = [(done - 1, m)]
         history = [
             {"step": step, "loss": float(mi["loss"]),
              "worker_var": float(mi["worker_loss_var"]),
@@ -216,7 +326,8 @@ class Trainer:
         ]
         final = dict(history[-1]) if history else {}
         return Report(backend="mesh", spec=self.spec, history=history, final=final,
-                      model=params, state=gstate)
+                      model=params, state=gstate, n_steps=done - start_step,
+                      start_step=start_step, interrupted=stop["sig"] is not None)
 
     def _synthetic_batches(self, cfg, c: int):
         from repro.data import make_batch_for, synthetic_lm_batches

@@ -48,17 +48,41 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=40)
     ap.add_argument("--lockstep", action="store_true",
                     help="run the fixed-batch barriered baseline instead")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="warm-start from a training checkpoint (full-state "
+                         "snapshot; only the params subtree is restored)")
+    ap.add_argument("--ckpt-step", type=int, default=0,
+                    help="checkpoint step to serve (default: latest manifest entry)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.ckpt_dir:
+        # the manifest's recorded config is authoritative for its snapshot —
+        # serving a reduced-trained checkpoint must not silently build the
+        # full-size model because a flag was forgotten
+        from repro.checkpoint import model_config_from_manifest
+
+        try:
+            ckpt_cfg = model_config_from_manifest(args.ckpt_dir,
+                                                  args.ckpt_step or None)
+        except (FileNotFoundError, ValueError):
+            ckpt_cfg = None  # v1 dir / no metadata: trust the flags
+        if ckpt_cfg is not None:
+            if (ckpt_cfg.name, ckpt_cfg.n_layers, ckpt_cfg.d_model) != (
+                    cfg.name, cfg.n_layers, cfg.d_model):
+                print(f"using checkpoint config {ckpt_cfg.name} "
+                      f"(layers={ckpt_cfg.n_layers}, d_model={ckpt_cfg.d_model}) "
+                      f"from the manifest over the CLI flags")
+            cfg = ckpt_cfg
     if not cfg.supports_decode:
         raise SystemExit(f"{cfg.name} is encoder-only; no decode (see DESIGN.md §5)")
     ctx = build_ctx(args.mesh)
 
-    params = split_params(T.model_init(jax.random.PRNGKey(args.seed), cfg))[0]
+    params = (None if args.ckpt_dir else
+              split_params(T.model_init(jax.random.PRNGKey(args.seed), cfg))[0])
 
     n_req = args.requests or args.batch
     rng = np.random.default_rng(args.seed)
@@ -84,7 +108,18 @@ def main(argv=None):
         reqs.append(Request(prompt, max_new_tokens=gen, sampling=sp, patches=patches))
 
     max_len = max(args.prompt_len, max_prompt) + args.gen
-    engine = ServeEngine(params, cfg, ctx, max_batch=args.batch, max_len=max_len)
+    if args.ckpt_dir:
+        # one restore path for API and CLI: ServeEngine.from_checkpoint owns
+        # the manifest lookup, params-subtree restore and mesh placement
+        engine = ServeEngine.from_checkpoint(
+            args.ckpt_dir, cfg, ctx, step=args.ckpt_step or None,
+            max_batch=args.batch, max_len=max_len)
+        from repro.checkpoint import latest_step
+
+        print(f"serving training snapshot step "
+              f"{args.ckpt_step or latest_step(args.ckpt_dir)} from {args.ckpt_dir}")
+    else:
+        engine = ServeEngine(params, cfg, ctx, max_batch=args.batch, max_len=max_len)
 
     if args.lockstep:
         comps, stats = lockstep_generate(engine, reqs)

@@ -8,7 +8,16 @@ tests); on a real TPU slice the same driver runs the production mesh via
 
 Example:
   PYTHONPATH=src python -m repro.launch.train --arch yi-9b --reduced \
-      --steps 200 --mode ssgd --strategy guided_fused --rho 10 --log-every 10
+      --steps 200 --mode ssgd --strategy guided_fused --rho 10 --log-every 10 \
+      --ckpt-dir /tmp/run1 --ckpt-every 50
+
+Preempted? The same command plus --resume restarts bit-exactly from the
+latest manifest entry (full state: params AND the guided compensation state —
+see DESIGN.md §8). Checkpointing is owned by the Trainer, which snapshots
+asynchronously off the hot path and installs a SIGTERM-safe final save; this
+launcher only sets the knobs. (It used to save `{"params": params}` itself
+from inside on_step — buffers that the next jit dispatch donates, and a
+snapshot that silently dropped the entire GuidedState.)
 
 Any strategy registered with @register_compensator is selectable here by name
 without touching this file or the train step.
@@ -19,8 +28,8 @@ import argparse
 import json
 import time
 
-from repro.checkpoint import save
 from repro.engine import ExperimentSpec, Trainer, build_ctx, compensator_names  # noqa: F401
+from repro.engine.spec import SCHEDULES
 
 # build_ctx re-exported for back-compat (serve and older scripts imported it here)
 
@@ -58,6 +67,9 @@ def spec_from_args(args) -> ExperimentSpec:
         workers=args.workers,
         micro=args.micro,
         seed=args.seed,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        keep_last=args.keep_last,
     )
 
 
@@ -79,19 +91,34 @@ def main(argv=None):
     ap.add_argument("--rho", type=int, default=10)
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--lr", type=float, default=0.05)
-    ap.add_argument("--schedule", default="constant", choices=["constant", "wsd"])
+    # choices come from the spec's canonical tuple: cosine was supported by
+    # ExperimentSpec/Trainer all along but rejected here by a stale hardcoded list
+    ap.add_argument("--schedule", default="constant", choices=list(SCHEDULES))
     ap.add_argument("--mesh", default="local", choices=["local", "host", "prod", "prod-multipod"])
     ap.add_argument("--workers", type=int, default=0, help="logical worker count c (local mesh)")
     ap.add_argument("--micro", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="checkpoint retention (manifest prunes older snapshots; 0 keeps all)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume bit-exactly from the latest manifest entry in --ckpt-dir")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics-out", default="")
     args = ap.parse_args(argv)
 
     spec = spec_from_args(args)
     trainer = Trainer.from_spec(spec)
+
+    if args.resume:
+        if not args.ckpt_dir:
+            raise SystemExit("--resume needs --ckpt-dir")
+        from repro.checkpoint import latest_step
+
+        at = latest_step(args.ckpt_dir)
+        print(f"resuming from step {at} in {args.ckpt_dir}" if at is not None
+              else f"no checkpoint in {args.ckpt_dir}; starting fresh")
 
     history = []
     t0 = time.time()
@@ -105,19 +132,24 @@ def main(argv=None):
             history.append(rec)
             print(f"step {step:5d} loss {rec['loss']:.4f} worker_var {rec['worker_var']:.2e} "
                   f"corr_w {rec['corr_w']:.2f} ({time.time()-t0:.1f}s)")
-        if args.ckpt_every and args.ckpt_dir and step and step % args.ckpt_every == 0:
-            save(args.ckpt_dir, step, {"params": params})
-            print(f"checkpointed step {step}")
+        if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            print(f"checkpoint enqueued at step {step + 1}")
 
-    # the launcher keeps its own log-step history; don't retain per-step metrics
-    report = trainer.fit(on_step=on_step, keep_history=False)
+    # the launcher keeps its own log-step history; don't retain per-step
+    # metrics. Checkpointing (periodic async snapshots + the final/SIGTERM
+    # full-state save) is the Trainer's: spec.ckpt_dir/ckpt_every/keep_last.
+    report = trainer.fit(on_step=on_step, keep_history=False, resume=args.resume)
 
-    if args.ckpt_dir:
-        save(args.ckpt_dir, args.steps, {"params": report.model})
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(history, f, indent=1)
-    print(f"done: final loss {history[-1]['loss']:.4f}")
+    if report.interrupted:
+        print(f"interrupted by SIGTERM at step {report.start_step + report.n_steps}; "
+              f"full state saved to {args.ckpt_dir} — rerun with --resume")
+    if history:
+        print(f"done: final loss {history[-1]['loss']:.4f}")
+    else:  # resumed at (or past) the final step: nothing left to run
+        print(f"done: no steps to run (resumed at step {report.start_step})")
     return history
 
 

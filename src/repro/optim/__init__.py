@@ -7,4 +7,4 @@ from repro.optim.optimizers import (  # noqa: F401
     rmsprop,
     sgd,
 )
-from repro.optim.schedules import constant, cosine, wsd  # noqa: F401
+from repro.optim.schedules import SCHEDULES, constant, cosine, for_run, wsd  # noqa: F401

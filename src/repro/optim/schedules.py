@@ -32,3 +32,27 @@ def wsd(lr: float, warmup: int, stable: int, decay: int, final_frac: float = 0.0
         return jnp.where(step < warmup, warm, jnp.where(in_decay, dec, lr))
 
     return f
+
+
+# canonical name list lives in repro.engine.spec (jax-free, so the spec and
+# the launcher's argparse choices validate without importing this module)
+from repro.engine.spec import SCHEDULES  # noqa: E402
+
+
+def for_run(name: str, lr: float, warmup: int, n_steps: int):
+    """Resolve a schedule name for a run of `n_steps` total steps, with the
+    phases partitioning the run. For wsd the decay phase is the back (ceil)
+    half of the post-warmup budget, so warmup + stable + decay == n_steps and
+    the decay actually reaches final_frac by the end of the run (the old
+    wiring passed stable = decay = n_steps // 2, overrunning by `warmup`
+    steps — the run ended before the decay finished)."""
+    if name == "constant":
+        return constant(lr)
+    if name == "cosine":
+        return cosine(lr, warmup, n_steps)
+    if name == "wsd":
+        rem = max(n_steps - warmup, 0)
+        stable = rem // 2
+        decay = rem - stable
+        return wsd(lr, warmup, stable, decay)
+    raise ValueError(f"unknown schedule {name!r}; known: {', '.join(SCHEDULES)}")

@@ -161,6 +161,40 @@ class ServeEngine:
         self._next_id = 0
         self.reset_stats()
 
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str, cfg=None, ctx: ShardCtx = LOCAL_CTX, *,
+                        step: Optional[int] = None, **engine_kw) -> "ServeEngine":
+        """Warm-start serving from a training snapshot: restore the `params`
+        subtree of the full-state checkpoint (repro.checkpoint, DESIGN.md §8)
+        and build an engine around it — the guided/optimizer state stays on
+        disk for the training job that owns it.
+
+        `step=None` takes the latest manifest entry; `cfg=None` rebuilds the
+        ModelConfig from the manifest metadata the trainer records
+        (arch/reduced/model_overrides), so serving a checkpoint dir needs no
+        out-of-band config. On a distributed `ctx` the restore re-places the
+        params onto the serving mesh via the logical sharding rules —
+        train-on-prod, serve-on-host works without a resharding script."""
+        from repro import checkpoint as C
+        from repro.models.module import split_params
+        from repro.sharding.rules import shardings_for
+
+        if step is None:
+            step = C.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoint manifest (or v1 LATEST) in {ckpt_dir}")
+        if cfg is None:
+            cfg = C.model_config_from_manifest(ckpt_dir, step)
+        # a freshly initialized model is the restore template (treedef+dtypes)
+        template, logical = split_params(T.model_init(jax.random.PRNGKey(0), cfg))
+        shardings = (shardings_for(logical, template, ctx.mesh, ctx.rules)
+                     if ctx.distributed else None)
+        params = C.restore_subtree(ckpt_dir, step, "params", template, shardings)
+        if shardings is None:
+            params = jax.tree.map(jnp.asarray, params)
+        return cls(params, cfg, ctx, **engine_kw)
+
     # ------------------------------------------------------------- plumbing
 
     @staticmethod

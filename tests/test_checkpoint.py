@@ -1,9 +1,24 @@
-"""Checkpoint save/restore roundtrip."""
+"""Checkpoint subsystem: v1 npz roundtrips, mismatch diagnostics, the v2
+manifest/async writer, and subtree (params-only) restore."""
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.checkpoint import latest_step, restore, save
+from repro.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    manifest_meta,
+    read_manifest,
+    restore,
+    restore_subtree,
+    save,
+    save_train_state,
+    snapshot,
+)
 
 
 def test_roundtrip(tmp_path):
@@ -24,3 +39,143 @@ def test_multiple_steps(tmp_path):
     assert latest_step(str(tmp_path)) == 5
     out = restore(str(tmp_path), 5, tree)
     np.testing.assert_array_equal(np.asarray(out["w"]), 5.0)
+
+
+def test_bf16_roundtrip_is_exact(tmp_path):
+    """bf16 leaves archive as f32 (numpy has no bf16) but the round-trip is
+    bit-preserving: every bf16 value is exactly representable in f32."""
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.standard_normal((64,)).astype(np.float32)).astype(jnp.bfloat16)
+    tree = {"w": vals, "scale": jnp.asarray(3.14159, jnp.bfloat16)}
+    save(str(tmp_path), 1, tree)
+    out = restore(str(tmp_path), 1, tree)
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out["w"], np.float32),
+                                  np.asarray(vals, np.float32))
+    np.testing.assert_array_equal(np.asarray(out["scale"], np.float32),
+                                  np.asarray(tree["scale"], np.float32))
+
+
+def test_mismatch_raises_valueerror_naming_keys(tmp_path):
+    """restore into a different tree names the missing AND unexpected keys in
+    a ValueError (it used to die with a bare KeyError on the first lookup)."""
+    save(str(tmp_path), 3, {"params": {"w": jnp.zeros(2)}, "extra": jnp.ones(1)})
+    wrong = {"params": {"w": jnp.zeros(2), "b": jnp.zeros(3)}}
+    with pytest.raises(ValueError) as ei:
+        restore(str(tmp_path), 3, wrong)
+    msg = str(ei.value)
+    assert "missing from archive" in msg and "'b'" in msg
+    assert "unexpected in archive" in msg and "extra" in msg
+    assert "KeyError" not in msg
+
+
+def test_shape_mismatch_raises_valueerror(tmp_path):
+    save(str(tmp_path), 1, {"w": jnp.zeros((2, 3))})
+    with pytest.raises(ValueError, match=r"\(2, 3\).*\(3, 2\)"):
+        restore(str(tmp_path), 1, {"w": jnp.zeros((3, 2))})
+
+
+def test_missing_archive_is_filenotfound(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore(str(tmp_path), 9, {"w": jnp.zeros(1)})
+
+
+# ------------------------------------------------------------ v2: manifest
+
+
+def _tree(v):
+    return {"params": {"w": jnp.full((4,), float(v))}, "step": jnp.asarray(v)}
+
+
+def test_sync_save_writes_manifest_and_retains(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4):
+        save_train_state(d, s, _tree(s), meta={"strategy": "guided_fused"},
+                         keep_last=2)
+    man = read_manifest(d)
+    assert man["latest"] == 4
+    steps = [c["step"] for c in man["ckpts"]]
+    assert steps == [3, 4]  # keep_last=2 pruned 1 and 2
+    files = sorted(f for f in os.listdir(d) if f.endswith(".npz"))
+    assert files == ["step_00000003.npz", "step_00000004.npz"]
+    assert latest_step(d) == 4
+    assert manifest_meta(d)["strategy"] == "guided_fused"
+    out = restore(d, 4, _tree(0))
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]), 4.0)
+
+
+def test_manifest_is_valid_json_and_atomic_layout(tmp_path):
+    d = str(tmp_path)
+    save_train_state(d, 7, _tree(7))
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 2
+    assert man["ckpts"][0]["file"] == "step_00000007.npz"
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]  # no droppings
+
+
+def test_async_writer_roundtrip_and_retention(tmp_path):
+    d = str(tmp_path)
+    ck = AsyncCheckpointer(d, keep_last=3, meta={"arch": "yi_9b"})
+    for s in range(1, 7):
+        assert ck.save(s, _tree(s))
+    assert not ck.save(6, _tree(6))  # dedupe: same step as last save
+    ck.close()
+    man = read_manifest(d)
+    assert man["latest"] == 6
+    assert [c["step"] for c in man["ckpts"]] == [4, 5, 6]
+    assert len([f for f in os.listdir(d) if f.endswith(".npz")]) == 3
+    out = restore(d, 5, _tree(0))
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]), 5.0)
+    assert manifest_meta(d, 5)["arch"] == "yi_9b"
+
+
+def test_async_writer_snapshot_is_immune_to_donation(tmp_path):
+    """save() copies device->host on the caller thread: deleting the source
+    buffer right after save (what jit donation does to the live arrays) must
+    not corrupt the snapshot that lands on disk."""
+    d = str(tmp_path)
+    ck = AsyncCheckpointer(d, keep_last=0)
+    w = jnp.arange(8, dtype=jnp.float32)
+    ck.save(1, {"w": w})
+    w.delete()  # simulate the next step's donation
+    ck.close()
+    out = restore(d, 1, {"w": jnp.zeros(8)})
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(8, dtype=np.float32))
+
+
+def test_async_writer_surfaces_errors(tmp_path):
+    import shutil
+
+    d = os.path.join(str(tmp_path), "sub")
+    ck = AsyncCheckpointer(d, keep_last=0)
+    shutil.rmtree(d)
+    with open(d, "w") as f:  # the ckpt "dir" is now a file: writes must fail
+        f.write("in the way")
+    try:
+        ck.save(1, _tree(1))
+        with pytest.raises(RuntimeError, match="checkpoint writer failed"):
+            ck.wait()
+    finally:
+        os.unlink(d)
+        ck.close()
+
+
+def test_restore_subtree_params_only(tmp_path):
+    d = str(tmp_path)
+    full = snapshot({"w": jnp.full((2, 2), 9.0), "b": jnp.ones(2, jnp.bfloat16)},
+                    {"score": jnp.zeros(4)}, cursor=12)
+    save_train_state(d, 12, full)
+    out = restore_subtree(d, 12, "params", {"w": jnp.zeros((2, 2)),
+                                            "b": jnp.zeros(2, jnp.bfloat16)})
+    np.testing.assert_array_equal(np.asarray(out["w"]), 9.0)
+    assert out["b"].dtype == jnp.bfloat16
+    with pytest.raises(ValueError, match="no 'params' subtree matching"):
+        restore_subtree(d, 12, "params", {"nope": jnp.zeros(1)})
+
+
+def test_latest_step_falls_back_to_v1_latest(tmp_path):
+    d = str(tmp_path)
+    save(d, 11, {"w": jnp.zeros(2)})  # v1 API: writes LATEST, no manifest
+    assert read_manifest(d) is None
+    assert latest_step(d) == 11

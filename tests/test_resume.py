@@ -1,0 +1,330 @@
+"""Fault tolerance: bit-exact checkpoint/resume of the full guided train state.
+
+The headline criterion of the checkpoint subsystem (DESIGN.md §8): for every
+registered delay-compensation strategy on the mesh backend,
+
+    train(N)  ==  train(k) -> kill -> resume -> train(N-k)
+
+leaf for leaf over params AND GuidedState (opt state, consistency scores,
+w_stale, strategy extra, step). Also covers the SIGTERM path, the launcher
+regression (it used to snapshot `{"params": params}` only, dropping the
+entire guided state), resharding restore, serve warm-start, and the two
+schedule/throughput satellite fixes.
+"""
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine import ExperimentSpec, Trainer
+
+
+def _spec(strategy, mode, **kw):
+    kw.setdefault("rho", 4)  # cut at k=3 is MID-window: scores must survive
+    kw.setdefault("staleness", 2)
+    kw.setdefault("steps", 6)
+    return ExperimentSpec(
+        backend="mesh", arch="yi_9b", reduced=True, mode=mode, strategy=strategy,
+        lr=5e-2, seed=0, seq_len=16, global_batch=4, workers=2, **kw)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------- the headline matrix
+
+# every registered strategy (the built-in registry; test-local plugins from
+# other modules are excluded on purpose) under its natural execution mode
+STRATEGIES = [
+    ("none", "ssgd"),
+    ("guided_fused", "ssgd"),
+    ("guided_two_pass", "ssgd"),
+    ("dc_asgd", "asgd"),
+    ("dc_asgd_guided", "asgd"),
+    ("gap_aware", "asgd"),
+]
+
+
+@pytest.mark.parametrize("strategy,mode", STRATEGIES)
+def test_bit_exact_resume(strategy, mode, tmp_path):
+    d = str(tmp_path / strategy)
+    full = Trainer.from_spec(_spec(strategy, mode)).fit()
+
+    # "kill" after k=3 of 6 steps: a separate process's worth of state is
+    # exactly what the final full-state snapshot holds
+    part = Trainer.from_spec(_spec(strategy, mode, steps=3, ckpt_dir=d)).fit()
+    assert part.n_steps == 3
+
+    resumed = Trainer.from_spec(_spec(strategy, mode, ckpt_dir=d)).fit(resume=True)
+    assert resumed.start_step == 3 and resumed.n_steps == 3
+    _assert_trees_equal(full.model, resumed.model)
+    _assert_trees_equal(full.state, resumed.state)  # scores, w_stale, opt, extra
+    assert int(resumed.state.step) == 6
+    # the cut was mid-window: the restored consistency scores were live state
+    if strategy in ("guided_fused", "guided_two_pass", "dc_asgd_guided"):
+        assert float(jnp.sum(jnp.abs(part.state.score))) > 0.0
+
+
+def test_resume_with_explicit_data_stream(tmp_path):
+    """resume skips the already-consumed prefix of a caller-provided stream."""
+    from repro.data import make_batch_for
+
+    d = str(tmp_path)
+    spec = _spec("guided_fused", "ssgd")
+    cfg = spec.model_config()
+    batches = [make_batch_for(cfg, 16, 4, seed=i) for i in range(6)]
+    full = Trainer.from_spec(spec).fit(data=[dict(b) for b in batches])
+    Trainer.from_spec(spec.replace(steps=3, ckpt_dir=d)).fit(
+        data=[dict(b) for b in batches[:3]])
+    resumed = Trainer.from_spec(spec.replace(ckpt_dir=d)).fit(
+        data=[dict(b) for b in batches], resume=True)
+    _assert_trees_equal(full.model, resumed.model)
+    _assert_trees_equal(full.state, resumed.state)
+
+
+def test_resume_past_end_raises_without_stranding_writer(tmp_path):
+    """Failed resume validation must not leak the async writer thread (the
+    checkpointer is constructed only after the restore succeeds)."""
+    import threading
+
+    d = str(tmp_path)
+    Trainer.from_spec(_spec("none", "ssgd", steps=4, ckpt_dir=d)).fit()
+    n0 = threading.active_count()
+    with pytest.raises(ValueError, match="past this run's n_steps=2"):
+        Trainer.from_spec(_spec("none", "ssgd", steps=2, ckpt_dir=d)).fit(resume=True)
+    assert threading.active_count() == n0  # no stranded ckpt-writer threads
+
+
+def test_resume_without_checkpoint_starts_fresh(tmp_path):
+    d = str(tmp_path / "empty")
+    r = Trainer.from_spec(_spec("none", "ssgd", ckpt_dir=d)).fit(resume=True)
+    assert r.start_step == 0 and r.n_steps == 6
+
+
+def test_resume_rejects_params_only_checkpoint(tmp_path):
+    """THE original bug as an error message: a v1 params-only archive cannot
+    silently restart compensation from scratch — restore names what's gone."""
+    from repro.checkpoint import restore_train_state, save, snapshot
+    from repro.engine import mesh as M
+    from repro.optim import get_optimizer
+
+    spec = _spec("guided_fused", "ssgd")
+    params, _, gstate = M.init_train_state(
+        jax.random.PRNGKey(0), spec.model_config(), spec.to_guided_config(),
+        get_optimizer("sgd"), n_workers=2)
+    d = str(tmp_path)
+    save(d, 3, {"params": params})  # what launch/train.py used to write
+    with pytest.raises(ValueError, match="missing from archive.*gstate"):
+        restore_train_state(d, 3, snapshot(params, gstate, 0))
+
+
+def test_sigterm_saves_full_state_and_resume_matches(tmp_path):
+    """SIGTERM mid-run: the in-flight step finishes, full state is snapshotted,
+    fit returns interrupted=True — and resume completes bit-exactly."""
+    d = str(tmp_path)
+    full = Trainer.from_spec(_spec("guided_fused", "ssgd")).fit()
+
+    def kill_at_2(step, m, params):
+        if step == 2:
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    part = Trainer.from_spec(_spec("guided_fused", "ssgd", ckpt_dir=d)).fit(
+        on_step=kill_at_2)
+    assert part.interrupted
+    assert part.n_steps == 3  # steps 0..2 ran; the in-flight step completed
+    from repro.checkpoint import latest_step
+
+    assert latest_step(d) == 3
+    resumed = Trainer.from_spec(_spec("guided_fused", "ssgd", ckpt_dir=d)).fit(
+        resume=True)
+    assert resumed.start_step == 3 and not resumed.interrupted
+    _assert_trees_equal(full.model, resumed.model)
+    _assert_trees_equal(full.state, resumed.state)
+
+
+def test_periodic_async_checkpoints_and_retention(tmp_path):
+    from repro.checkpoint import read_manifest
+
+    d = str(tmp_path)
+    Trainer.from_spec(_spec("guided_fused", "ssgd", ckpt_dir=d, ckpt_every=2,
+                            keep_last=2)).fit()
+    man = read_manifest(d)
+    assert man["latest"] == 6
+    assert [c["step"] for c in man["ckpts"]] == [4, 6]  # 2 pruned by retention
+    assert man["ckpts"][-1]["meta"]["strategy"] == "guided_fused"
+    files = [f for f in os.listdir(d) if f.endswith(".npz")]
+    assert len(files) == 2
+
+
+# ------------------------------------------------------------- the launcher
+
+
+def test_launcher_restored_run_matches_uninterrupted(tmp_path):
+    """Regression for the launcher checkpoint hazard: snapshots now go through
+    the Trainer's full-state path (params AND GuidedState, off the donated
+    buffers), so kill+--resume reproduces the uninterrupted run's final
+    archive bit for bit."""
+    from repro.checkpoint import latest_step, restore_train_state
+    from repro.launch.train import main as train_main
+
+    common = ["--arch", "yi_9b", "--reduced", "--mode", "ssgd",
+              "--strategy", "guided_fused", "--rho", "4", "--lr", "0.05",
+              "--seq", "16", "--batch", "4", "--workers", "2",
+              "--log-every", "2"]
+    da, db = str(tmp_path / "a"), str(tmp_path / "b")
+    train_main(common + ["--steps", "6", "--ckpt-dir", da])
+    train_main(common + ["--steps", "3", "--ckpt-dir", db])   # "preempted"
+    train_main(common + ["--steps", "6", "--ckpt-dir", db, "--resume"])
+    assert latest_step(da) == latest_step(db) == 6
+
+    import numpy as _np
+    A = _np.load(os.path.join(da, "step_00000006.npz"))
+    B = _np.load(os.path.join(db, "step_00000006.npz"))
+    assert sorted(A.files) == sorted(B.files)
+    assert any("gstate" in k for k in A.files)  # full state, not params-only
+    for k in A.files:
+        _np.testing.assert_array_equal(A[k], B[k], err_msg=k)
+
+
+def test_launcher_accepts_cosine_schedule(tmp_path, capsys):
+    """argparse rejected --schedule cosine although ExperimentSpec/Trainer
+    support it; choices now come from the spec's canonical tuple."""
+    from repro.launch.train import main as train_main
+
+    hist = train_main(["--arch", "yi_9b", "--reduced", "--steps", "3",
+                       "--seq", "16", "--batch", "4", "--workers", "2",
+                       "--schedule", "cosine", "--log-every", "1"])
+    assert len(hist) == 3 and np.isfinite(hist[-1]["loss"])
+
+
+# ------------------------------------------------- resharding + serve warm-start
+
+
+def test_reshard_restore_onto_host_mesh(tmp_path):
+    """A snapshot written on the local (meshless) backend restores onto a host
+    mesh through the logical sharding rules: every leaf comes back as a
+    committed jax.Array with the mesh's sharding."""
+    from repro import checkpoint as C
+    from repro.engine import mesh as M
+    from repro.optim import get_optimizer
+
+    d = str(tmp_path)
+    spec = _spec("dc_asgd", "asgd", optimizer="rmsprop")
+    Trainer.from_spec(spec.replace(steps=2, ckpt_dir=d)).fit()
+
+    ctx = M.build_ctx("host")  # 1-device host mesh on CPU; still a real Mesh
+    assert ctx.distributed
+    params, logical, gstate = M.init_train_state(
+        jax.random.PRNGKey(0), spec.model_config(), spec.to_guided_config(),
+        get_optimizer("rmsprop"), n_workers=2,
+        strategy=Trainer.from_spec(spec).strategy)
+    shardings = C.train_state_shardings(ctx, logical, params, gstate)
+    snap = C.restore_train_state(d, 2, C.snapshot(params, gstate, 0),
+                                 shardings=shardings)
+    assert int(np.asarray(snap["data"]["cursor"])) == 2
+    for leaf in jax.tree.leaves(snap):
+        assert isinstance(leaf, jax.Array) and leaf.sharding.mesh == ctx.mesh
+    # w_stale resharded like the params (non-trivial tree: rmsprop "r" too)
+    assert jax.tree.structure(snap["gstate"].w_stale) == jax.tree.structure(params)
+
+
+def test_serve_engine_from_checkpoint(tmp_path):
+    """A training snapshot warm-starts serving: params subtree only, config
+    rebuilt from the manifest metadata, token streams identical to an engine
+    built directly from the trained params."""
+    from repro.serve import Request, ServeEngine
+
+    d = str(tmp_path)
+    spec = _spec("guided_fused", "ssgd", steps=2, ckpt_dir=d)
+    report = Trainer.from_spec(spec).fit()
+
+    eng_ckpt = ServeEngine.from_checkpoint(d, max_batch=2, max_len=32)  # cfg from manifest
+    eng_live = ServeEngine(report.model, spec.model_config(), max_batch=2, max_len=32)
+    prompts = [[5, 3, 8, 1], [2, 9]]
+    outs = []
+    for eng in (eng_ckpt, eng_live):
+        comps = eng.run([Request(p, max_new_tokens=6) for p in prompts])
+        outs.append({c.request_id: c.tokens for c in comps})
+    assert outs[0] == outs[1]
+
+
+def test_serve_from_checkpoint_missing_dir(tmp_path):
+    from repro.serve import ServeEngine
+
+    with pytest.raises(FileNotFoundError, match="no checkpoint manifest"):
+        ServeEngine.from_checkpoint(str(tmp_path / "nope"))
+
+
+# ------------------------------------------------- satellite: schedules
+
+
+def test_wsd_phases_partition_run_and_reach_final_frac():
+    """warmup + stable + decay == n_steps now (the old wiring passed
+    stable = decay = n_steps // 2, overrunning by warmup steps, so the decay
+    never reached final_frac before the run ended)."""
+    from repro.optim import for_run
+
+    lr, warmup, n = 0.1, 10, 100
+    f = for_run("wsd", lr, warmup, n)
+    assert float(f(0)) == 0.0
+    assert float(f(warmup)) == pytest.approx(lr)
+    rem = n - warmup
+    stable, decay = rem // 2, rem - rem // 2
+    assert float(f(warmup + stable)) == pytest.approx(lr)      # plateau end
+    assert float(f(n)) == pytest.approx(0.01 * lr, rel=1e-5)   # full decay IN the run
+    # the last step the run actually takes is already essentially decayed
+    assert float(f(n - 1)) < 0.012 * lr
+    # old behaviour check: overrun would leave f(n) ~ lr * final_frac^(something < 1)
+    assert float(f(n)) < float(f(warmup + stable + 1))
+
+
+def test_cosine_schedule_endpoint():
+    from repro.optim import for_run
+
+    f = for_run("cosine", 0.2, 5, 50)
+    assert float(f(50)) == pytest.approx(0.1 * 0.2, rel=1e-5)
+
+
+def test_unknown_schedule_rejected_at_spec_construction():
+    with pytest.raises(ValueError, match="unknown schedule 'linear'"):
+        ExperimentSpec(backend="mesh", schedule="linear")
+    with pytest.raises(ValueError, match="ckpt_every=5 needs ckpt_dir"):
+        ExperimentSpec(backend="mesh", ckpt_every=5)
+
+
+# ------------------------------------------------- satellite: steps_per_s
+
+
+def test_steps_per_s_counts_server_steps_not_history_records():
+    """Throughput derives from the schedule/server step count (train_ps's own
+    counter, the scan schedule's T, the mesh loop's steps-actually-run), not
+    from len(history)."""
+    from repro.data import load_dataset
+
+    X, y, k = load_dataset("new_thyroid", seed=0)
+    rep = Trainer.from_spec(ExperimentSpec.for_algo("gSSGD", epochs=2, seed=0)).fit(
+        (X, y, k))
+    assert rep.n_steps == len(rep.history) > 0  # sim: 1 record per arrival
+    assert rep.steps_per_s == pytest.approx(rep.n_steps / rep.wall_time_s)
+
+    rep2 = Trainer.from_spec(ExperimentSpec.for_algo(
+        "gSSGD", backend="scan", epochs=2, seed=0, n_seeds=2)).fit((X, y, k))
+    # scan: n_steps is per-seed (the schedule's T); throughput counts seeds
+    assert rep2.n_steps == len(rep2.history)
+    assert rep2.steps_per_s == pytest.approx(2 * rep2.n_steps / rep2.wall_time_s)
+
+
+def test_steps_per_s_on_resumed_mesh_run_counts_steps_run(tmp_path):
+    """A resumed fit runs N-k steps; throughput must not claim all N."""
+    d = str(tmp_path)
+    Trainer.from_spec(_spec("none", "ssgd", steps=4, ckpt_dir=d)).fit()
+    r = Trainer.from_spec(_spec("none", "ssgd", ckpt_dir=d)).fit(resume=True)
+    assert r.n_steps == 2 and r.start_step == 4
+    assert r.steps_per_s == pytest.approx(2 / r.wall_time_s)
