@@ -60,7 +60,10 @@ def _build(steps: int):
 
 def _loop(step_fn, init, batches, save_hook=None, warmup: int = 2):
     """Times each step; save_hook(done, params, gstate) runs ON the hot path
-    (exactly where the trainer snapshots), so its cost lands in the step time."""
+    (exactly where the trainer snapshots), so its cost lands in the step time.
+    Returns (warm_times, compile_time_s): the first step — dominated by the
+    jit compile — is reported separately instead of averaged in (the same
+    compile/warm split Report.compile_time_s makes)."""
     params, gstate = init()
     times = []
     for i, batch in enumerate(batches):
@@ -70,7 +73,7 @@ def _loop(step_fn, init, batches, save_hook=None, warmup: int = 2):
         if save_hook is not None:
             save_hook(i + 1, params, gstate)
         times.append(time.perf_counter() - t0)
-    return np.asarray(times[warmup:])
+    return np.asarray(times[warmup:]), float(times[0])
 
 
 def run(steps: int = 20, every: int = 2, verbose: bool = True) -> dict:
@@ -79,7 +82,7 @@ def run(steps: int = 20, every: int = 2, verbose: bool = True) -> dict:
     spec, step_fn, init, batches = _build(steps)
     root = tempfile.mkdtemp(prefix="ckpt_bench_")
     try:
-        t_none = _loop(step_fn, init, batches)
+        t_none, compile_s = _loop(step_fn, init, batches)
 
         d = os.path.join(root, "async")
         ck = C.AsyncCheckpointer(d, keep_last=2, meta=C.spec_meta(spec))
@@ -88,7 +91,7 @@ def run(steps: int = 20, every: int = 2, verbose: bool = True) -> dict:
             if done % every == 0:
                 ck.save(done, C.snapshot(params, gstate, done))
 
-        t_async = _loop(step_fn, init, batches, async_save)
+        t_async, _ = _loop(step_fn, init, batches, async_save)
         ck.close()
 
         d2 = os.path.join(root, "sync")
@@ -98,7 +101,7 @@ def run(steps: int = 20, every: int = 2, verbose: bool = True) -> dict:
                 C.save_train_state(d2, done, C.snapshot(params, gstate, done),
                                    meta=C.spec_meta(spec), keep_last=2)
 
-        t_sync = _loop(step_fn, init, batches, sync_save)
+        t_sync, _ = _loop(step_fn, init, batches, sync_save)
 
         n_ckpts = max(1, sum(1 for s in range(3, steps + 1) if s % every == 0))
         out = {
@@ -115,6 +118,14 @@ def run(steps: int = 20, every: int = 2, verbose: bool = True) -> dict:
                 "async": float((t_async.sum() - t_none.sum()) * 1e3 / n_ckpts),
                 "sync": float((t_sync.sum() - t_none.sum()) * 1e3 / n_ckpts),
             },
+            # the compile/warm split: step_ms above is already warm (the jit
+            # compile of the shared step_fn happens once, in the first "none"
+            # step); the one-time cost is reported, not averaged in
+            "compile_time_s": compile_s,
+            "warm_steps_per_s": {k: float(1.0 / t.mean())
+                                 for k, t in (("none", t_none),
+                                              ("async", t_async),
+                                              ("sync", t_sync))},
         }
         a = out["overhead_ms_per_ckpt"]["async"]
         s = out["overhead_ms_per_ckpt"]["sync"]

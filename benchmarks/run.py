@@ -204,6 +204,27 @@ def bench_serve(full: bool, out_path: str = "BENCH_serve.json"):
     return out
 
 
+def bench_train(full: bool, out_path: str = "BENCH_train.json"):
+    """Chunked multi-step dispatch + double-buffered prefetch vs the per-step
+    mesh loop (benchmarks/train_bench.py). Headline: warm steps/s speedup at
+    chunk_steps>=32 + prefetch on the small (dispatch-bound) arch."""
+    import json
+
+    from benchmarks.train_bench import run
+
+    steps = 2048 if full else 512
+    out, us = _timed(lambda: run(steps=steps, verbose=False))
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    h = out["headline"]
+    print(f"train_chunked_vs_stepwise,{us:.0f},"
+          f"speedup_chunk32_prefetch={h['speedup_chunk32_prefetch']:.2f}x;"
+          f"speedup_chunk64_prefetch={h['speedup_chunk64_prefetch']:.2f}x;"
+          f"baseline={h['baseline_steps_per_s']:.0f}steps/s;"
+          f"best={h['best_steps_per_s']:.0f}steps/s;steps={steps}")
+    return out
+
+
 def bench_ckpt(full: bool, out_path: str = "BENCH_ckpt.json"):
     """Async checkpoint-writer overhead vs inline saves (benchmarks/ckpt_bench).
     Headline: step-time overhead per full-state snapshot, async vs sync."""
@@ -238,7 +259,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="paper protocol (30x50)")
     ap.add_argument("--only", default="",
                     help="comma list: tables,variants,rho,progression,roofline,"
-                         "kernels,scale,delaysim,serve,ckpt")
+                         "kernels,scale,delaysim,serve,ckpt,train")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -270,6 +291,8 @@ def main() -> None:
         bench_serve(args.full)
     if want("ckpt"):
         bench_ckpt(args.full)
+    if want("train"):
+        bench_train(args.full)
 
 
 if __name__ == "__main__":

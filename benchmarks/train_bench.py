@@ -1,0 +1,130 @@
+"""Training-throughput benchmark: chunked dispatch + prefetch vs today's loop.
+
+The pipeline headline (ISSUE 5 / DESIGN.md §9): at small per-step compute the
+mesh trainer is dispatch- and staging-bound — one Python-dispatched jit call
+per step, a synchronous host->device copy and batch *generation* in front of
+it. Chunked multi-step dispatch (`spec.chunk_steps=K`: K steps fused into one
+jitted lax.scan) amortizes the dispatch; prefetch (`spec.prefetch=True`)
+moves generation + stacking + the device_put onto a background thread. Both
+are bit-exact with the per-step loop (tests/test_trainloop.py), so the sweep
+below is pure throughput.
+
+Sweep: chunk_steps in {1, 8, 32, 64} x prefetch {off, on} x two archs (a
+GQA llama-style block and a dense MHA sliding-window block, both shrunk to
+the dispatch-bound operating point). Reported per cell: WARM steps/s
+(Report.steps_per_s — the compile/warm split keeps jit compilation out of the
+steady state) and compile_time_s. Headline: warm steps/s at chunk_steps=32,
+prefetch on, vs chunk_steps=1 prefetch off (today's loop) on the small arch.
+
+Machine-readable: BENCH_train.json via `benchmarks/run.py --only train`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# two archs at the dispatch-bound operating point: tiny widths, short
+# sequences — per-step compute in the hundreds of microseconds, which is
+# exactly the regime where per-step dispatch dominates (the paper's "hide the
+# compensation work behind parallel execution" applied to the host side).
+# yi_9b (GQA llama block) is the SMALL point the headline is measured at;
+# minicpm_2b (dense MHA + sliding window) is a bit wider, showing the win
+# shrink as per-step compute grows toward being the bottleneck.
+TINY = (("n_layers", 1), ("d_model", 16), ("d_ff", 32), ("vocab_size", 128),
+        ("n_heads", 2), ("n_kv_heads", 2))
+SMALL = (("n_layers", 1), ("d_model", 16), ("d_ff", 32), ("vocab_size", 256),
+         ("n_heads", 2), ("n_kv_heads", 2))
+POINTS = {
+    "yi_9b": dict(arch="yi_9b", overrides=TINY, seq_len=4, global_batch=2),
+    "minicpm_2b": dict(arch="minicpm_2b", overrides=SMALL, seq_len=8,
+                       global_batch=2),
+}
+
+CHUNKS = (1, 8, 32, 64)
+
+
+def _one(arch_key: str, point: dict, chunk_steps: int, prefetch: bool,
+         steps: int) -> dict:
+    from repro.engine import ExperimentSpec, Trainer
+
+    spec = ExperimentSpec(
+        backend="mesh", arch=point["arch"], reduced=True,
+        model_overrides=point["overrides"], mode="ssgd",
+        strategy="guided_fused", rho=8, lr=5e-2, seed=0, steps=steps,
+        seq_len=point["seq_len"], global_batch=point["global_batch"],
+        workers=2, chunk_steps=chunk_steps, prefetch=prefetch)
+    # two identical fits; report the second. Report's compile/warm split
+    # already keeps the jit compile out of steps_per_s, but the FIRST fit of
+    # a cell also pays process-level ramp (XLA client thread pools, allocator
+    # arenas, dispatch fast-path caches) that the split cannot see — the
+    # repeated fit is the steady state the sweep compares.
+    Trainer.from_spec(spec).fit(keep_history=False)
+    rep = Trainer.from_spec(spec).fit(keep_history=False)
+    return {
+        "warm_steps_per_s": rep.steps_per_s,
+        "compile_time_s": rep.compile_time_s,
+        "wall_time_s": rep.wall_time_s,
+        "warm_steps": rep.warm_steps,
+        "final_loss": rep.final_loss,
+    }
+
+
+def run(steps: int = 512, chunks=CHUNKS, verbose: bool = True) -> dict:
+    if 1 not in chunks:
+        raise ValueError(f"chunks={chunks!r} must include 1 — chunk1_sync is "
+                         f"the stepwise baseline every speedup divides by")
+    out = {"protocol": {"steps": steps, "chunk_steps": list(chunks),
+                        "prefetch": [False, True],
+                        "archs": {k: {"overrides": [list(kv) for kv in v["overrides"]],
+                                      "seq_len": v["seq_len"],
+                                      "global_batch": v["global_batch"]}
+                                  for k, v in POINTS.items()},
+                        "strategy": "guided_fused", "workers": 2},
+           "per_arch": {}}
+    for arch_key, point in POINTS.items():
+        grid = {}
+        losses = []
+        for k in chunks:
+            for pf in (False, True):
+                cell = _one(arch_key, point, k, pf, steps)
+                grid[f"chunk{k}_{'prefetch' if pf else 'sync'}"] = cell
+                losses.append(cell["final_loss"])
+                if verbose:
+                    print(f"{arch_key:12s} chunk={k:3d} prefetch={pf!s:5s} "
+                          f"{cell['warm_steps_per_s']:8.1f} steps/s warm "
+                          f"(compile {cell['compile_time_s']:.2f}s)")
+        base = grid["chunk1_sync"]["warm_steps_per_s"]
+        for k in chunks:
+            if k != 1:
+                grid[f"speedup_chunk{k}_prefetch"] = (
+                    grid[f"chunk{k}_prefetch"]["warm_steps_per_s"] / base)
+        # identical trajectories across the whole grid (bit-exactness is
+        # locked by tests; the equal final loss is the cheap cross-check)
+        grid["final_loss_max_abs_diff"] = float(
+            np.max(np.abs(np.asarray(losses) - losses[0])))
+        out["per_arch"][arch_key] = grid
+    small = out["per_arch"]["yi_9b"]
+    speedups = {k: small[f"speedup_chunk{k}_prefetch"] for k in chunks if k != 1}
+    out["headline"] = {
+        "small_arch": "yi_9b",
+        # the acceptance metric: chunk_steps >= 32 + prefetch vs today's loop
+        # (None when the sweep was called without those chunk sizes)
+        "speedup_chunk32_prefetch": speedups.get(32),
+        "speedup_chunk64_prefetch": speedups.get(64),
+        "speedup_best_chunk_prefetch": max(speedups.values()) if speedups else None,
+        "baseline_steps_per_s": small["chunk1_sync"]["warm_steps_per_s"],
+        "best_steps_per_s": max(
+            small[f"chunk{k}_{m}"]["warm_steps_per_s"]
+            for k in chunks for m in ("sync", "prefetch")),
+    }
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    out = run()
+    with open("BENCH_train.json", "w") as f:
+        json.dump(out, f, indent=1)
+    h = out["headline"]
+    print(f"headline: {h['speedup_chunk32_prefetch']:.2f}x (chunk32+prefetch) "
+          f"/ {h['speedup_chunk64_prefetch']:.2f}x (chunk64+prefetch)")

@@ -1,2 +1,3 @@
 from repro.data.uci_analogs import DATASETS, iqr_filter, load_dataset, train_test_split  # noqa: F401
 from repro.data.tokens import synthetic_lm_batches, make_batch_for  # noqa: F401
+from repro.data.prefetch import ChunkPrefetcher, batch_put, stack_blocks  # noqa: F401

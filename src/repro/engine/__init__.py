@@ -37,6 +37,8 @@ _LAZY = {
     "build_train_step": "mesh",
     "init_train_state": "mesh",
     "resolve_strategy": "mesh",
+    "build_chunk_step": "trainloop",
+    "chunk_schedule": "trainloop",
     "TOPOLOGY_SAMPLERS": "delaysim",
     "clear_runners": "delaysim",
 }

@@ -155,7 +155,11 @@ def build_train_step(cfg, gcfg: G.GuidedConfig, opt: Optimizer, ctx: ShardCtx, l
         updates, opt_state = opt.update(grads, gstate.opt_state, params,
                                         lr * c if gcfg.mode != "seq" else lr)
         params = tree_add(params, updates)
-        params = strategy.correct(params, gstate, lr, weighted_grad_fn(batch))
+        if strategy.needs_correction:
+            # only correcting strategies trace the second weighted
+            # forward+backward; for the rest (guided_fused folds its replay
+            # into THIS backward) the closure never enters the HLO
+            params = strategy.correct(params, gstate, lr, weighted_grad_fn(batch))
 
         gstate = G.advance(
             gstate, gcfg, opt_state, params, E_i, mean_loss,

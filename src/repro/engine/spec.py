@@ -130,6 +130,9 @@ class ExperimentSpec:
     workers: int = 0               # paper's c; 0 -> data shards of the mesh
     micro: int = 1                 # gradient-accumulation microbatches
     staleness: int = 0             # asgd: w_stale refresh period (0 -> rho)
+    chunk_steps: int = 1           # fuse K steps into one lax.scan dispatch
+                                   # (1 -> the literal per-step legacy loop)
+    prefetch: bool = False         # async double-buffered batch staging
     dc_lambda: float = 0.04
     correction_scale: float = 1.0
     magnitude_weight: float = 0.1
@@ -152,6 +155,10 @@ class ExperimentSpec:
             raise ValueError(
                 f"ckpt_every={self.ckpt_every} needs ckpt_dir (where should "
                 f"the snapshots go?)")
+        if self.chunk_steps < 1:
+            raise ValueError(
+                f"chunk_steps must be >= 1 (got {self.chunk_steps}); 1 runs "
+                f"the per-step loop, K > 1 fuses K steps per dispatch")
         # strategy/mode compatibility fails here, at construction, with the
         # registry's message — not deep inside jit or mid-fit.
         why = _STALE_REQUIRED.get(self.strategy)

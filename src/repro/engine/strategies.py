@@ -51,6 +51,16 @@ class DelayCompensator:
         return ()
 
     # ---------------------------------------------------------------- hooks
+    @property
+    def needs_correction(self) -> bool:
+        """False when `correct` is the identity: the train step then never
+        builds the second weighted forward+backward closure, so strategies
+        like guided_fused don't pay HLO size / compile time for a replay path
+        they never take. A subclass that overrides `correct` is assumed to
+        need it unless it also overrides this property (DcAsgdGuided: only
+        its two_pass flavour corrects)."""
+        return type(self).correct is not DelayCompensator.correct
+
     def correction_weights(self, state: G.GuidedState, c: int):
         """(c,) weights for the consistency-weighted loss term of THIS step's
         backward pass (zero except at window end for fused guided replay)."""
@@ -181,6 +191,10 @@ class DcAsgdGuided(DcAsgd):
 
     name = "dc_asgd_guided"
     sim_guided = True
+
+    @property
+    def needs_correction(self) -> bool:
+        return self.gcfg.correction == "two_pass"
 
     def correction_weights(self, state: G.GuidedState, c: int):
         if self.gcfg.correction != "fused":

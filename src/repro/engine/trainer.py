@@ -47,7 +47,18 @@ class Report:
                                # list of them); mesh: params pytree
     state: Any = None          # mesh: final GuidedState
     wall_time_s: float = 0.0   # wall time of fit() (incl. jit compile)
-    steps_per_s: float = 0.0   # server steps (x seeds on scan) per second
+    steps_per_s: float = 0.0   # WARM throughput: server steps (x seeds on
+                               # scan) per second — warm_steps/warm_time_s
+                               # when the mesh loop measured them; falls
+                               # back to n_steps/wall_time_s otherwise
+    compile_time_s: float = 0.0  # sum of compiling dispatches (first
+                               # occurrence of each chunk shape, incl. the
+                               # steps they cover; mesh; 0 when unmeasured)
+    warm_steps: int = 0        # steps outside compiling dispatches (mesh) —
+                               # the numerator of the warm steps_per_s
+    warm_time_s: float = 0.0   # wall time of the warm dispatches alone (the
+                               # loop span minus compiling windows): setup,
+                               # restore, and teardown never land in it
     n_steps: int = 0           # server steps this fit actually ran (per seed);
                                # from the schedule/server counter, NOT history
                                # record count — resume/history granularity safe
@@ -116,6 +127,18 @@ class Trainer:
         own log-step records pass keep_history=False to retain (and sync)
         only the final step.
 
+        Pipelining (mesh backend, DESIGN.md §9): spec.chunk_steps=K > 1 fuses
+        K train steps into one jitted lax.scan dispatch over a stacked
+        (K, ...) batch block — bit-exact with the per-step loop, but on_step
+        then fires once per CHUNK with stacked (k,) device metrics and
+        step = the last step index of the chunk (chunk_steps=1 restores the
+        legacy per-step scalar contract, and runs the literal legacy loop).
+        spec.prefetch=True stages the next chunk's batches (generation,
+        stacking, device_put against the data-shard sharding) on a background
+        thread while the current chunk computes. Checkpoint cadence is
+        preserved exactly: chunks split at ckpt_every multiples, and SIGTERM
+        drains the in-flight chunk before the final snapshot.
+
         Checkpointing (mesh backend, DESIGN.md §8): spec.ckpt_dir enables
         full-state snapshots — params AND GuidedState (opt state, consistency
         scores, w_stale ring, strategy extra, step) plus the data-stream
@@ -147,7 +170,13 @@ class Trainer:
             report = self._fit_mesh(data, steps, on_step, keep_history, resume)
             n_total = report.n_steps
         report.wall_time_s = time.perf_counter() - t0
-        report.steps_per_s = n_total / max(report.wall_time_s, 1e-9)
+        if report.warm_steps > 0 and report.warm_time_s > 0:
+            # warm throughput: compiling dispatches AND the out-of-loop setup
+            # (init, restore, teardown) are split out so BENCH numbers stop
+            # averaging compilation into the steady state
+            report.steps_per_s = report.warm_steps / report.warm_time_s
+        else:
+            report.steps_per_s = n_total / max(report.wall_time_s, 1e-9)
         return report
 
     def _fit_sim(self, data) -> Report:
@@ -181,166 +210,13 @@ class Trainer:
                       n_steps=res.get("n_steps", len(res["history"])))
 
     def _fit_mesh(self, data, steps, on_step, keep_history=True, resume=False) -> Report:
-        import signal
-        import threading
+        from repro.engine import trainloop
 
-        import jax
-        import jax.numpy as jnp
-        import numpy as np
-
-        from repro import checkpoint as C
-        from repro.engine import mesh as M
-        from repro.optim import for_run, get_optimizer
-
-        spec = self.spec
-        n_steps = steps or spec.steps
-        cfg = spec.model_config()
-        ctx = M.build_ctx(spec.mesh)
-        gcfg = spec.to_guided_config()
-        opt = get_optimizer(spec.optimizer)
-        # schedule phases partition n_steps (for_run); the wsd endpoint
-        # actually reaches final_frac before the run ends
-        lr = for_run(spec.schedule, spec.lr, spec.warmup, n_steps)
-
-        c = spec.workers or max(ctx.n_workers, 1)
-        if spec.global_batch % c != 0:
-            # a real exception, not an assert (asserts vanish under python -O):
-            # per-worker losses need equal data shards
-            raise ValueError(
-                f"spec.global_batch={spec.global_batch} is not divisible by the "
-                f"worker count c={c} (spec.workers={spec.workers}, mesh "
-                f"{spec.mesh!r} provides {ctx.n_workers} data shards); the "
-                f"per-worker loss reshape needs equal shards — adjust "
-                f"spec.global_batch or spec.workers")
-        key = jax.random.PRNGKey(spec.seed)
-        params, logical, gstate = M.init_train_state(
-            key, cfg, gcfg, opt, n_workers=c, strategy=self.strategy
-        )
-        step_fn = M.build_train_step(cfg, gcfg, opt, ctx, lr, n_micro=spec.micro,
-                                     n_workers=c, strategy=self.strategy)
-        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
-
-        start_step = 0
-        if resume:
-            if not spec.ckpt_dir:
-                raise ValueError("fit(resume=True) needs spec.ckpt_dir to know "
-                                 "where the snapshots live")
-            latest = C.latest_step(spec.ckpt_dir)
-            if latest is not None:
-                # the freshly initialized state is the restore template: same
-                # treedef (incl. strategy extra / w_stale presence), so a
-                # checkpoint from a different config fails loudly, not subtly
-                template = C.snapshot(params, gstate, 0)
-                shardings = (C.train_state_shardings(ctx, logical, params, gstate)
-                             if ctx.distributed else None)
-                snap = C.restore_train_state(spec.ckpt_dir, latest, template,
-                                             shardings=shardings)
-                params, gstate = snap["params"], snap["gstate"]
-                if shardings is None:
-                    # commit host arrays to device so donation keeps working
-                    params = jax.tree.map(jnp.asarray, params)
-                    gstate = jax.tree.map(jnp.asarray, gstate)
-                start_step = int(np.asarray(snap["data"]["cursor"]))
-                if start_step > n_steps:
-                    raise ValueError(
-                        f"checkpoint at step {start_step} is past this run's "
-                        f"n_steps={n_steps}; nothing to resume")
-
-        # constructed only once resume validation passed: a failed restore
-        # must not strand the writer thread
-        ckpt = None
-        if spec.ckpt_dir:
-            ckpt = C.AsyncCheckpointer(spec.ckpt_dir, keep_last=spec.keep_last,
-                                       meta=C.spec_meta(spec))
-
-        batches = iter(data) if data is not None else self._synthetic_batches(cfg, c)
-        for _ in range(start_step):  # replay the data cursor: same rng protocol,
-            next(batches)            # so resumed steps see the exact batches
-
-        # SIGTERM-safe: a preempted run finishes the in-flight step, snapshots
-        # full state, and exits cleanly instead of losing the window
-        stop = {"sig": None}
-        old_handler, installed = None, False
-        if ckpt is not None and threading.current_thread() is threading.main_thread():
-            def _on_term(signum, frame):
-                stop["sig"] = signum
-
-            try:
-                # the previous handler can legitimately be None (installed
-                # from C) — track installation separately so restore still runs
-                old_handler = signal.signal(signal.SIGTERM, _on_term)
-                installed = True
-            except (ValueError, AttributeError):  # non-main interpreter / platform
-                installed = False
-
-        raw = []
-        m = None
-        done = start_step
-        try:
-            for step in range(start_step, n_steps):
-                batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
-                params, gstate, m = step_fn(params, gstate, batch)
-                done = step + 1
-                if keep_history:
-                    raw.append((step, m))
-                if on_step is not None:
-                    on_step(step, m, params)
-                if ckpt is not None and spec.ckpt_every and done % spec.ckpt_every == 0:
-                    # device->host copy here (step boundary, before the next
-                    # dispatch donates these buffers); serialization is async
-                    ckpt.save(done, C.snapshot(params, gstate, done))
-                if stop["sig"] is not None:
-                    break
-        finally:
-            if installed:
-                # a None previous handler (installed from C) cannot be
-                # re-registered through signal.signal; SIG_DFL beats leaving
-                # our dead closure swallowing every later SIGTERM
-                signal.signal(signal.SIGTERM,
-                              old_handler if old_handler is not None
-                              else signal.SIG_DFL)
-            if ckpt is not None:
-                import sys
-
-                loop_failed = sys.exc_info()[0] is not None
-                try:
-                    try:
-                        # final full-state snapshot (dedupes against a periodic
-                        # save that already covered `done`)
-                        if done > start_step or C.latest_step(spec.ckpt_dir) is None:
-                            ckpt.save(done, C.snapshot(params, gstate, done))
-                    finally:
-                        ckpt.close()  # drain + join even if the save failed
-                except Exception:
-                    # a training-loop exception outranks checkpoint teardown
-                    # noise; surface the writer error only on a clean loop
-                    if not loop_failed:
-                        raise
-        if not keep_history and m is not None:
-            raw = [(done - 1, m)]
-        history = [
-            {"step": step, "loss": float(mi["loss"]),
-             "worker_var": float(mi["worker_loss_var"]),
-             "corr_w": float(mi["corr_weight_sum"])}
-            for step, mi in raw
-        ]
-        final = dict(history[-1]) if history else {}
-        return Report(backend="mesh", spec=self.spec, history=history, final=final,
-                      model=params, state=gstate, n_steps=done - start_step,
-                      start_step=start_step, interrupted=stop["sig"] is not None)
+        return trainloop.fit(self.spec, self.strategy, data=data, steps=steps,
+                             on_step=on_step, keep_history=keep_history,
+                             resume=resume)
 
     def _synthetic_batches(self, cfg, c: int):
-        from repro.data import make_batch_for, synthetic_lm_batches
+        from repro.engine.trainloop import synthetic_stream
 
-        spec = self.spec
-        if cfg.audio_frontend or cfg.arch_type == "vlm":
-            def gen():
-                i = 0
-                while True:
-                    yield make_batch_for(cfg, spec.seq_len, spec.global_batch,
-                                         seed=spec.seed + i)
-                    i += 1
-
-            return gen()
-        return synthetic_lm_batches(cfg.vocab_size, spec.seq_len, spec.global_batch,
-                                    seed=spec.seed, n_corpora=c)
+        return synthetic_stream(self.spec, cfg, c)

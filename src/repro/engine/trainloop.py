@@ -1,0 +1,349 @@
+"""Pipelined mesh fit loop: chunked multi-step dispatch + prefetch (DESIGN.md §9).
+
+The per-step loop the Trainer used to run — one Python-dispatched jit call per
+train step with a synchronous `jnp.asarray` host->device copy in front of it —
+leaves the accelerator idle on dispatch and data staging whenever per-step
+compute is small. This module is the same treatment PR 2 gave the delay
+simulator, applied to real mesh training:
+
+  * `chunk_schedule` partitions the step range into dispatch chunks of at most
+    `spec.chunk_steps` steps, split (never shifted) so every `ckpt_every`
+    multiple lands on a chunk boundary — the snapshot cadence is preserved
+    exactly, and a resume point may land anywhere in the schedule;
+  * `build_chunk_step` fuses K train steps into ONE jitted `lax.scan` over a
+    stacked `(K, ...)` batch block with the `(params, gstate)` carry donated
+    end-to-end; metrics accumulate on device and come back as stacked `(K,)`
+    arrays, so per-step history is preserved while the host syncs once per
+    chunk instead of once per step;
+  * the `repro.data.prefetch` double buffer stages block i+1 (batch
+    generation, stacking, and the `jax.device_put` against the data-shard
+    sharding) on a worker thread while chunk i computes.
+
+Contracts (locked in tests/test_trainloop.py):
+
+  * bit-exactness — chunked+prefetched fit(N) == the stepwise loop
+    leaf-for-leaf (params, gstate, and per-step history) for every registered
+    strategy; `chunk_steps=1` runs the literal legacy per-step loop;
+  * checkpoints land on exactly the same steps as the stepwise loop, and
+    resume is bit-exact from any snapshot, including resume points between
+    the natural chunk boundaries (the schedule is recomputed from
+    `start_step`, and any chunk partition yields the same trajectory);
+  * SIGTERM drains the in-flight chunk, snapshots the full state at its
+    boundary, and returns `Report.interrupted=True`;
+  * `on_step(step, metrics, params)` fires once per chunk with the stacked
+    `(k,)` device metrics and `step` = the LAST step index of the chunk;
+    `chunk_steps=1` restores the legacy per-step scalar contract. Either way
+    the `params` handed over are donated to the next dispatch — read or save
+    them synchronously inside the callback.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional
+
+from repro.engine.spec import ExperimentSpec
+
+
+def chunk_schedule(start: int, stop: int, chunk_steps: int,
+                   ckpt_every: int = 0) -> List[int]:
+    """Sizes of the consecutive dispatch chunks covering steps [start, stop).
+
+    Each chunk is at most `chunk_steps` long; when `ckpt_every` is set, every
+    multiple of it lands on a chunk boundary (chunks are split at the cadence,
+    never shifted past it), so the chunked loop snapshots at exactly the steps
+    the stepwise loop would. A `start` mid-cadence (resume from a snapshot
+    that a split chunk produced) re-aligns at the next multiple.
+    """
+    if chunk_steps < 1:
+        raise ValueError(f"chunk_steps must be >= 1 (got {chunk_steps})")
+    sizes = []
+    s = start
+    while s < stop:
+        k = min(chunk_steps, stop - s)
+        if ckpt_every:
+            k = min(k, ckpt_every - s % ckpt_every)
+        sizes.append(k)
+        s += k
+    return sizes
+
+
+#: Report/launcher history record name -> raw device-metrics key
+_METRIC_KEYS = (("loss", "loss"), ("worker_var", "worker_loss_var"),
+                ("corr_w", "corr_weight_sum"))
+
+
+def step_records(m, first: int, indices=None) -> List[dict]:
+    """Materialize per-step history records from ONE dispatch's raw device
+    metrics — scalar per-step values (`chunk_steps=1`) or stacked `(k,)`
+    chunk arrays. `first` is the step index of the dispatch's first step;
+    `indices` restricts which in-chunk offsets materialize (None -> all).
+    The single host transfer per metric happens here, so callers on a
+    logging cadence (the launcher) pass only their log offsets and an empty
+    selection never syncs at all.
+    """
+    import numpy as np
+
+    shape = getattr(m["loss"], "shape", ())
+    if indices is None:
+        indices = range(shape[0] if shape else 1)
+    indices = list(indices)
+    if not indices:
+        return []
+    arrs = {name: np.asarray(m[key]) for name, key in _METRIC_KEYS}
+    return [{"step": first + i,
+             **{name: float(a[i] if shape else a) for name, a in arrs.items()}}
+            for i in indices]
+
+
+def build_chunk_step(step_fn: Callable) -> Callable:
+    """Fuse `step_fn(params, gstate, batch) -> (params, gstate, metrics)` into
+    `chunk_fn(params, gstate, stacked)`: one `lax.scan` over the leading axis
+    of `stacked` (a `(K, ...)`-stacked batch block) with the train state as
+    the carry. Returns the final state plus metrics stacked to `(K,)` arrays.
+    Jit it with `donate_argnums=(0, 1)` — the carry is donated end-to-end.
+    """
+    import jax
+
+    def chunk_fn(params, gstate, stacked):
+        def body(carry, batch):
+            p, g, m = step_fn(carry[0], carry[1], batch)
+            return (p, g), m
+
+        (params, gstate), metrics = jax.lax.scan(body, (params, gstate), stacked)
+        return params, gstate, metrics
+
+    return chunk_fn
+
+
+def synthetic_stream(spec: ExperimentSpec, cfg, c: int):
+    """The per-step synthetic batch stream for `data=None` mesh fits (the
+    deterministic function of (seed, #draws) that makes the checkpoint data
+    cursor replayable)."""
+    from repro.data import make_batch_for, synthetic_lm_batches
+
+    if cfg.audio_frontend or cfg.arch_type == "vlm":
+        def gen():
+            i = 0
+            while True:
+                yield make_batch_for(cfg, spec.seq_len, spec.global_batch,
+                                     seed=spec.seed + i)
+                i += 1
+
+        return gen()
+    return synthetic_lm_batches(cfg.vocab_size, spec.seq_len, spec.global_batch,
+                                seed=spec.seed, n_corpora=c)
+
+
+def fit(spec: ExperimentSpec, strategy, data=None, steps: Optional[int] = None,
+        on_step: Optional[Callable] = None, keep_history: bool = True,
+        resume: bool = False):
+    """The mesh backend's fit loop (what `Trainer.fit` dispatches to).
+
+    Returns a `Report` whose `compile_time_s` sums the compiling dispatches
+    (the first occurrence of every chunk shape — the uneven tail and
+    ckpt-split chunks each compile their own program), whose `warm_steps`
+    counts the steps outside them, and whose `warm_time_s` is the wall time
+    of those warm dispatches alone (loop span minus compile windows; setup,
+    restore and teardown excluded) — `Report.steps_per_s` is their quotient.
+    See the module docstring for the chunk/prefetch contracts.
+    """
+    import signal
+    import threading
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import checkpoint as C
+    from repro.data.prefetch import ChunkPrefetcher, batch_put, stack_blocks
+    from repro.engine import mesh as M
+    from repro.engine.trainer import Report
+    from repro.optim import for_run, get_optimizer
+
+    n_steps = steps or spec.steps
+    cfg = spec.model_config()
+    ctx = M.build_ctx(spec.mesh)
+    gcfg = spec.to_guided_config()
+    opt = get_optimizer(spec.optimizer)
+    # schedule phases partition n_steps (for_run); the wsd endpoint
+    # actually reaches final_frac before the run ends
+    lr = for_run(spec.schedule, spec.lr, spec.warmup, n_steps)
+
+    c = spec.workers or max(ctx.n_workers, 1)
+    if spec.global_batch % c != 0:
+        # a real exception, not an assert (asserts vanish under python -O):
+        # per-worker losses need equal data shards
+        raise ValueError(
+            f"spec.global_batch={spec.global_batch} is not divisible by the "
+            f"worker count c={c} (spec.workers={spec.workers}, mesh "
+            f"{spec.mesh!r} provides {ctx.n_workers} data shards); the "
+            f"per-worker loss reshape needs equal shards — adjust "
+            f"spec.global_batch or spec.workers")
+    key = jax.random.PRNGKey(spec.seed)
+    params, logical, gstate = M.init_train_state(
+        key, cfg, gcfg, opt, n_workers=c, strategy=strategy
+    )
+    step_fn = M.build_train_step(cfg, gcfg, opt, ctx, lr, n_micro=spec.micro,
+                                 n_workers=c, strategy=strategy)
+    chunked = spec.chunk_steps > 1
+    dispatch = jax.jit(build_chunk_step(step_fn) if chunked else step_fn,
+                       donate_argnums=(0, 1))
+
+    start_step = 0
+    if resume:
+        if not spec.ckpt_dir:
+            raise ValueError("fit(resume=True) needs spec.ckpt_dir to know "
+                             "where the snapshots live")
+        latest = C.latest_step(spec.ckpt_dir)
+        if latest is not None:
+            # the freshly initialized state is the restore template: same
+            # treedef (incl. strategy extra / w_stale presence), so a
+            # checkpoint from a different config fails loudly, not subtly
+            template = C.snapshot(params, gstate, 0)
+            shardings = (C.train_state_shardings(ctx, logical, params, gstate)
+                         if ctx.distributed else None)
+            snap = C.restore_train_state(spec.ckpt_dir, latest, template,
+                                         shardings=shardings)
+            params, gstate = snap["params"], snap["gstate"]
+            if shardings is None:
+                # commit host arrays to device so donation keeps working
+                params = jax.tree.map(jnp.asarray, params)
+                gstate = jax.tree.map(jnp.asarray, gstate)
+            start_step = int(np.asarray(snap["data"]["cursor"]))
+            # the fresh-init state lives on only through `template` now that
+            # params/gstate are rebound — drop it (and the snapshot dict), or
+            # a resumed run holds ~2x the train-state memory of a fresh one
+            del template, snap
+            if start_step > n_steps:
+                raise ValueError(
+                    f"checkpoint at step {start_step} is past this run's "
+                    f"n_steps={n_steps}; nothing to resume")
+
+    # constructed only once resume validation passed: a failed restore
+    # must not strand the writer thread
+    ckpt = None
+    if spec.ckpt_dir:
+        ckpt = C.AsyncCheckpointer(spec.ckpt_dir, keep_last=spec.keep_last,
+                                   meta=C.spec_meta(spec))
+
+    batches = iter(data) if data is not None else synthetic_stream(spec, cfg, c)
+    for _ in range(start_step):  # replay the data cursor: same rng protocol,
+        next(batches)            # so resumed steps see the exact batches
+
+    sizes = chunk_schedule(start_step, n_steps, spec.chunk_steps, spec.ckpt_every)
+    # host-side source: pre-stacked (K, ...) blocks for the chunked path
+    # (generation + stacking run wherever the source is consumed — on the
+    # prefetch thread when spec.prefetch), per-step dicts otherwise
+    source = stack_blocks(batches, sizes) if chunked else batches
+    put = batch_put(ctx, stacked=chunked)
+    prefetcher = None
+    if spec.prefetch:
+        prefetcher = ChunkPrefetcher(source, put=put)
+        source = prefetcher
+
+    # SIGTERM-safe: a preempted run drains the in-flight chunk, snapshots
+    # full state, and exits cleanly instead of losing the window
+    stop = {"sig": None}
+    old_handler, installed = None, False
+    if ckpt is not None and threading.current_thread() is threading.main_thread():
+        def _on_term(signum, frame):
+            stop["sig"] = signum
+
+        try:
+            # the previous handler can legitimately be None (installed
+            # from C) — track installation separately so restore still runs
+            old_handler = signal.signal(signal.SIGTERM, _on_term)
+            installed = True
+        except (ValueError, AttributeError):  # non-main interpreter / platform
+            installed = False
+
+    raw = []                   # (first_step, k, metrics) per dispatch
+    m = None
+    done = start_step
+    compile_time_s = 0.0
+    compiled_steps = 0         # steps covered by compiling dispatches
+    warm_time_s = 0.0
+    seen_sizes = set()
+    t_loop = time.perf_counter()   # the loop span: setup/restore excluded
+    try:
+        for k in sizes:
+            # staging always goes through batch_put: sharded H2D placement on
+            # distributed meshes, plain jnp.asarray-equivalent on local
+            block = next(source) if spec.prefetch else put(next(source))
+            # every FIRST dispatch of a chunk shape jit-compiles (the uneven
+            # tail and ckpt_every-split chunks each get their own program);
+            # timing those (one host sync each) is what lets Report split
+            # compile time out of the warm steps/s
+            is_new = k not in seen_sizes
+            if is_new:
+                if m is not None:
+                    # drain queued warm dispatches first, or their execution
+                    # lands inside the timed window and inflates compile_time
+                    jax.block_until_ready(m)
+                t_dispatch = time.perf_counter()
+            params, gstate, m = dispatch(params, gstate, block)
+            if is_new:
+                jax.block_until_ready(m)
+                compile_time_s += time.perf_counter() - t_dispatch
+                compiled_steps += k
+                seen_sizes.add(k)
+            done += k
+            if keep_history:
+                raw.append((done - k, k, m))
+            if on_step is not None:
+                on_step(done - 1, m, params)
+            if ckpt is not None and spec.ckpt_every and done % spec.ckpt_every == 0:
+                # device->host copy here (chunk boundary, before the next
+                # dispatch donates these buffers); serialization is async
+                ckpt.save(done, C.snapshot(params, gstate, done))
+            if stop["sig"] is not None:
+                break
+        if m is not None:
+            # drain the queue so the warm window closes on finished work;
+            # warm time = loop span minus the timed compiling windows, so
+            # setup, restore and teardown never land in the throughput
+            # denominator (Report.steps_per_s = warm_steps / warm_time_s)
+            jax.block_until_ready(m)
+        warm_time_s = max(time.perf_counter() - t_loop - compile_time_s, 0.0)
+    finally:
+        if prefetcher is not None:
+            prefetcher.close()
+        if installed:
+            # a None previous handler (installed from C) cannot be
+            # re-registered through signal.signal; SIG_DFL beats leaving
+            # our dead closure swallowing every later SIGTERM
+            signal.signal(signal.SIGTERM,
+                          old_handler if old_handler is not None
+                          else signal.SIG_DFL)
+        if ckpt is not None:
+            import sys
+
+            loop_failed = sys.exc_info()[0] is not None
+            try:
+                try:
+                    # final full-state snapshot (dedupes against a periodic
+                    # save that already covered `done`)
+                    if done > start_step or C.latest_step(spec.ckpt_dir) is None:
+                        ckpt.save(done, C.snapshot(params, gstate, done))
+                finally:
+                    ckpt.close()  # drain + join even if the save failed
+            except Exception:
+                # a training-loop exception outranks checkpoint teardown
+                # noise; surface the writer error only on a clean loop
+                if not loop_failed:
+                    raise
+    if not keep_history and m is not None:
+        last_k = jax.tree.leaves(m)[0].shape[0] if chunked else 1
+        raw = [(done - last_k, last_k, m)]
+
+    history = []
+    for first, _, mi in raw:
+        history.extend(step_records(mi, first))
+    if not keep_history:
+        history = history[-1:]
+    final = dict(history[-1]) if history else {}
+    return Report(backend="mesh", spec=spec, history=history, final=final,
+                  model=params, state=gstate, n_steps=done - start_step,
+                  start_step=start_step, interrupted=stop["sig"] is not None,
+                  compile_time_s=compile_time_s, warm_time_s=warm_time_s,
+                  warm_steps=max(done - start_step - compiled_steps, 0))

@@ -66,6 +66,8 @@ def spec_from_args(args) -> ExperimentSpec:
         mesh=args.mesh,
         workers=args.workers,
         micro=args.micro,
+        chunk_steps=args.chunk_steps,
+        prefetch=args.prefetch,
         seed=args.seed,
         ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every,
@@ -97,6 +99,13 @@ def main(argv=None):
     ap.add_argument("--mesh", default="local", choices=["local", "host", "prod", "prod-multipod"])
     ap.add_argument("--workers", type=int, default=0, help="logical worker count c (local mesh)")
     ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--chunk-steps", type=int, default=1,
+                    help="fuse K train steps into ONE jitted lax.scan dispatch "
+                         "(bit-exact with K=1; big win when per-step compute "
+                         "is small — see BENCH_train.json)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="double-buffered async host->device batch staging "
+                         "(overlaps generation + H2D with the in-flight chunk)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -124,13 +133,21 @@ def main(argv=None):
     t0 = time.time()
 
     def on_step(step, m, params):
-        # m holds raw device scalars; only force the host sync on log steps
-        if step % args.log_every == 0 or step == args.steps - 1:
-            rec = {"step": step, "loss": float(m["loss"]),
-                   "worker_var": float(m["worker_loss_var"]),
-                   "corr_w": float(m["corr_weight_sum"])}
+        # m holds raw device metrics — per-step scalars (chunk_steps=1) or
+        # stacked (k,) chunk arrays with step = the chunk's LAST step index;
+        # step_records only forces the host sync when a log step falls
+        # inside the window (empty selection -> no transfer)
+        from repro.engine.trainloop import step_records
+
+        shape = getattr(m["loss"], "shape", ())
+        k = shape[0] if shape else 1
+        first = step - k + 1
+        logged = [i for i in range(k)
+                  if (first + i) % args.log_every == 0 or first + i == args.steps - 1]
+        for rec in step_records(m, first, logged):
             history.append(rec)
-            print(f"step {step:5d} loss {rec['loss']:.4f} worker_var {rec['worker_var']:.2e} "
+            print(f"step {rec['step']:5d} loss {rec['loss']:.4f} "
+                  f"worker_var {rec['worker_var']:.2e} "
                   f"corr_w {rec['corr_w']:.2f} ({time.time()-t0:.1f}s)")
         if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
             print(f"checkpoint enqueued at step {step + 1}")
@@ -146,6 +163,9 @@ def main(argv=None):
     if report.interrupted:
         print(f"interrupted by SIGTERM at step {report.start_step + report.n_steps}; "
               f"full state saved to {args.ckpt_dir} — rerun with --resume")
+    if report.warm_steps:
+        print(f"throughput: {report.steps_per_s:.1f} steps/s warm "
+              f"(first dispatch incl. jit compile: {report.compile_time_s:.2f}s)")
     if history:
         print(f"done: final loss {history[-1]['loss']:.4f}")
     else:  # resumed at (or past) the final step: nothing left to run

@@ -153,7 +153,8 @@ def test_cli_dc_asgd_guided_combo_keeps_guided_hooks():
     ns = argparse.Namespace(
         arch="yi_9b", reduced=True, layers=0, d_model=0, d_ff=0, steps=4, seq=16,
         batch=4, mode="dc_asgd", guided=True, strategy="", rho=2, optimizer="sgd",
-        lr=0.01, schedule="constant", mesh="local", workers=2, micro=1, seed=0,
+        lr=0.01, schedule="constant", mesh="local", workers=2, micro=1,
+        chunk_steps=1, prefetch=False, seed=0,
         ckpt_dir="", ckpt_every=0, keep_last=3,
     )
     spec = spec_from_args(ns)

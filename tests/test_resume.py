@@ -322,9 +322,14 @@ def test_steps_per_s_counts_server_steps_not_history_records():
 
 
 def test_steps_per_s_on_resumed_mesh_run_counts_steps_run(tmp_path):
-    """A resumed fit runs N-k steps; throughput must not claim all N."""
+    """A resumed fit runs N-k steps; throughput must not claim all N — and
+    (since the compile/warm split) it is WARM: the compiling dispatch and the
+    out-of-loop setup (incl. the checkpoint restore itself) are excluded
+    (Report.compile_time_s / Report.warm_steps / Report.warm_time_s)."""
     d = str(tmp_path)
     Trainer.from_spec(_spec("none", "ssgd", steps=4, ckpt_dir=d)).fit()
     r = Trainer.from_spec(_spec("none", "ssgd", ckpt_dir=d)).fit(resume=True)
     assert r.n_steps == 2 and r.start_step == 4
-    assert r.steps_per_s == pytest.approx(2 / r.wall_time_s)
+    assert r.compile_time_s > 0 and r.warm_steps == 1
+    assert 0 < r.warm_time_s < r.wall_time_s - r.compile_time_s
+    assert r.steps_per_s == pytest.approx(r.warm_steps / r.warm_time_s)
