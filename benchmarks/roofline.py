@@ -66,9 +66,12 @@ def print_table(rows):
                   f"{r['useful_ratio']:7.2f}")
 
 
+MESHES = ("pod16x16", "pod2x16x16", "mesh4x2")  # mesh4x2: --small self-gen runs
+
+
 def main():
     recs = load_records()
-    for mesh in ("pod16x16", "pod2x16x16"):
+    for mesh in MESHES:
         rows = table(recs, mesh=mesh)
         if rows:
             print(f"\n=== roofline: {mesh} (default rules) ===")

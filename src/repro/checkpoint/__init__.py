@@ -7,6 +7,8 @@ from repro.checkpoint.npz import (  # noqa: F401
     save,
 )
 from repro.checkpoint.state import (  # noqa: F401
+    dist_restore,
+    dist_snapshot,
     model_config_from_manifest,
     restore_subtree,
     restore_train_state,

@@ -82,6 +82,37 @@ def model_config_from_manifest(ckpt_dir: str, step: int = None):
     return cfg
 
 
+def dist_snapshot(W, version: int, staleness) -> dict:
+    """Chief-side snapshot of the async parameter server (repro.dist): the
+    authoritative weights, the store version, and the observed staleness
+    sequence so far — enough to resume/inspect a run, and the same manifest
+    format as the mesh snapshots (one checkpoint subsystem, DESIGN.md §8/§10)."""
+    return {
+        "dist": {
+            "W": np.asarray(W, np.float64),
+            "version": np.asarray(version, np.int64),
+            "staleness": np.asarray(staleness, np.int64),
+        }
+    }
+
+
+def dist_restore(ckpt_dir: str, step: int = None) -> dict:
+    """Load a chief snapshot: {"W", "version", "staleness"} as numpy arrays."""
+    from repro.checkpoint.npz import latest_step
+
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    data = np.load(step_path(ckpt_dir, step))
+    out = {}
+    for key in data.files:
+        # keys look like ['dist']/['W']; strip the path syntax
+        name = key.split("/")[-1].strip("[]'")
+        out[name] = data[key]
+    return out
+
+
 def restore_train_state(ckpt_dir: str, step: int, template: dict, shardings=None) -> dict:
     """Restore a full snapshot into the structure of `template` (a `snapshot()`
     of a freshly initialized train state). `shardings` re-places leaves across

@@ -1,0 +1,46 @@
+"""Worker-speed / delay topologies — ONE source of truth.
+
+Per-dispatch compute-time samplers `sampler(worker_id, rng) -> float` shared by
+
+  * the scan simulator's schedule generator (repro.engine.delaysim drives
+    core.parameter_server._event_schedule with these to precompute a
+    DelaySchedule), and
+  * the dist subsystem's fault injector (repro.dist.scenarios scales a real
+    worker's per-step sleep by the same draw),
+
+so a `straggler` run means the same worker-speed distribution whether the
+delay is simulated inside one lax.scan or produced by actual processes racing
+each other. `None` keeps the reference loop's literal draw
+(rng.exponential(1.0) + 0.1), preserving rng-stream parity with train_ps.
+"seq" and "barrier" are the deterministic topologies of those execution modes
+and need no sampler.
+"""
+from __future__ import annotations
+
+TOPOLOGY_SAMPLERS = {
+    "seq": None,
+    "barrier": None,
+    "exp": None,
+    "constant": lambda w, rng: 1.0,
+    "heavy_tail": lambda w, rng: 0.1 + rng.pareto(1.5),
+    "straggler": lambda w, rng: (10.0 if w == 0 else 1.0) * rng.exponential(1.0) + 0.1,
+    "hetero": lambda w, rng: rng.exponential(0.5 * (w + 2)) + 0.1,
+}
+
+
+def _exp_sampler(w: int, rng) -> float:
+    """train_ps's literal compute-time draw (the `None` entries above)."""
+    return rng.exponential(1.0) + 0.1
+
+
+def compute_time_sampler(topology: str):
+    """The sampler a REAL worker's compute time should follow for `topology`
+    (the deterministic seq/barrier topologies fall back to the reference
+    exponential draw — they describe arrival ordering, not speed)."""
+    try:
+        sampler = TOPOLOGY_SAMPLERS[topology]
+    except KeyError:
+        raise KeyError(
+            f"unknown topology {topology!r}; known: {', '.join(TOPOLOGY_SAMPLERS)}"
+        ) from None
+    return sampler or _exp_sampler

@@ -278,6 +278,8 @@ class DelaySchedule:
     staleness: np.ndarray    # (T,) int32, s_t: gradient computed at W_{t-s_t}
     n_workers: int
     topology: str = "exp"
+    worker: Optional[np.ndarray] = None  # (T,) int32, which worker delivered
+                                         # arrival t (None for pre-dist tables)
 
     @property
     def n_steps(self) -> int:
@@ -286,6 +288,12 @@ class DelaySchedule:
     @property
     def max_staleness(self) -> int:
         return int(self.staleness.max(initial=0))
+
+    @property
+    def fetch_version(self) -> np.ndarray:
+        """(T,) server version each arrival's gradient was fetched at:
+        f_t = t - s_t (the store had applied f_t updates at fetch time)."""
+        return np.arange(self.n_steps, dtype=np.int64) - self.staleness
 
 
 def _event_schedule(n_batches: int, c: int, rng, delay_sampler, t0: int):
@@ -299,7 +307,7 @@ def _event_schedule(n_batches: int, c: int, rng, delay_sampler, t0: int):
     """
     heap: list = []
     it = iter(range(n_batches))
-    order, fetch = [], []
+    order, fetch, whom = [], [], []
     t = t0
     for w in range(c):
         bid = next(it, None)
@@ -310,11 +318,12 @@ def _event_schedule(n_batches: int, c: int, rng, delay_sampler, t0: int):
         t_arr, w, bid, f = heapq.heappop(heap)
         order.append(bid)
         fetch.append(f)
+        whom.append(w)
         t += 1
         nbid = next(it, None)
         if nbid is not None:
             heapq.heappush(heap, (t_arr + delay_sampler(w, rng), w, nbid, t))
-    return order, fetch
+    return order, fetch, whom
 
 
 def _exp_sampler(w: int, rng) -> float:
@@ -333,7 +342,7 @@ def extract_schedule(cfg: PSConfig, n_train: int, rng, delay_sampler=None,
     c = cfg.n_workers
     bs = cfg.batch_size
     delay_sampler = delay_sampler or _exp_sampler
-    rows, stale = [], []
+    rows, stale, whom = [], [], []
     t = 0
     for _epoch in range(cfg.epochs):
         idx = rng.permutation(n_train)
@@ -342,17 +351,20 @@ def extract_schedule(cfg: PSConfig, n_train: int, rng, delay_sampler=None,
         if cfg.mode == "seq":
             rows.extend(epoch_rows)
             stale += [0] * nb
+            whom += [0] * nb
             t += nb
         elif cfg.mode == "ssgd":
             for r0 in range(0, nb, c):
                 round_ = epoch_rows[r0:r0 + c]
                 rows.extend(round_)
                 stale += list(range(len(round_)))
+                whom += list(range(len(round_)))
                 t += len(round_)
         elif cfg.mode == "asgd":
-            order, fetch = _event_schedule(nb, c, rng, delay_sampler, t)
+            order, fetch, workers = _event_schedule(nb, c, rng, delay_sampler, t)
             rows += [epoch_rows[b] for b in order]
             stale += [t + i - f for i, f in enumerate(fetch)]
+            whom += workers
             t += len(order)
         else:
             raise ValueError(cfg.mode)
@@ -361,6 +373,7 @@ def extract_schedule(cfg: PSConfig, n_train: int, rng, delay_sampler=None,
         staleness=np.asarray(stale, np.int32),
         n_workers=c,
         topology=topology or {"seq": "seq", "ssgd": "barrier"}.get(cfg.mode, "exp"),
+        worker=np.asarray(whom, np.int32),
     )
 
 

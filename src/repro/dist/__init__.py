@@ -1,0 +1,39 @@
+"""`repro.dist` — true asynchronous parameter-server execution (DESIGN.md §10).
+
+The scan backend *simulates* delay; this package *is* delay: a chief process
+owning a versioned `ParameterStore` (weights + guided window state), N real
+worker processes computing gradients and pushing them with the version they
+read, over stdlib `multiprocessing.connection` TCP. Staleness becomes an
+observed quantity (`applied_version - read_version`), the same
+`DelayCompensator` strategies drive the apply path, and a fault-injection
+layer (kill/restart/join, dropped updates, per-worker slowdowns) exercises
+what no simulator can: surviving real process death.
+
+Entry points:
+  * `Trainer.from_spec(ExperimentSpec(backend="dist", ...)).fit(data)`
+  * `python -m repro.launch.train --backend dist --dist-workers N ...`
+  * `python -m repro.dist.worker --addr host:port` (spawned per worker)
+
+This module resolves its exports lazily: worker processes import
+`repro.dist.worker`/`repro.dist.protocol` (numpy-only) and must not pay for
+the launcher's jax-importing dependency chain at startup.
+"""
+_EXPORTS = {
+    "run_local": ("repro.dist.launcher", "run_local"),
+    "ParameterStore": ("repro.dist.store", "ParameterStore"),
+    "strategy_needs_fetch": ("repro.dist.store", "strategy_needs_fetch"),
+    "Scenario": ("repro.dist.scenarios", "Scenario"),
+    "Chief": ("repro.dist.chief", "Chief"),
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        mod, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.dist' has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(mod), attr)

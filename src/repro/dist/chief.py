@@ -1,0 +1,124 @@
+"""The chief process: owns the `ParameterStore` and serves workers over TCP.
+
+One accept thread + one thread per worker connection; every connection thread
+funnels into the store's single lock, so applies are serialized (a parameter
+server is sequential at the store) while gradient COMPUTATION runs in the
+worker processes — the asynchrony the scan backend only simulates.
+
+Worker lifecycle is connection-scoped: a dropped connection (kill -9, crash)
+is recorded and tolerated; a reconnect with the same wid resumes that
+worker's stream (restart), a hello without a wid is assigned the next free
+id (elastic join). The chief never blocks on a dead worker in live mode —
+the step budget is filled by whoever is still pushing.
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.dist import protocol
+from repro.dist.store import ParameterStore
+
+
+class Chief:
+    """Listener + connection threads around one ParameterStore."""
+
+    def __init__(self, store: ParameterStore, meta: dict, host: str = protocol.DEFAULT_HOST,
+                 port: int = 0, authkey: bytes = protocol.AUTHKEY):
+        self.store = store
+        self.meta = meta
+        self._authkey = authkey
+        self.listener = protocol.listen(host, port, authkey)
+        self.address = self.listener.address
+        self._threads: list = []
+        self._next_wid = int(meta.get("n_workers", 0))
+        self._wid_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="dist-chief-accept", daemon=True)
+        self._accept_thread.start()
+
+    # ------------------------------------------------------------- lifecycle
+
+    def _accept_loop(self):
+        while True:
+            try:
+                conn = self.listener.accept()
+            except OSError:
+                return  # listener closed
+            if self._stop.is_set():
+                conn.close()  # close()'s wake-up connection
+                return
+            t = threading.Thread(target=self._serve, args=(conn,),
+                                 name="dist-chief-conn", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def close(self):
+        self._stop.set()
+        # closing a listener does NOT reliably unblock an accept() parked in
+        # another thread; a throwaway connection is the portable wake-up, so
+        # the accept thread can observe _stop and exit instead of leaking
+        try:
+            protocol.connect(self.address, self._authkey, timeout=1.0).close()
+        except Exception:  # refused/auth/EOF — thread already gone, fine
+            pass
+        try:
+            self.listener.close()
+        except OSError:
+            pass
+        self._accept_thread.join(timeout=5.0)
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    def _assign_wid(self, requested):
+        if requested is not None:
+            return int(requested)
+        with self._wid_lock:
+            wid = self._next_wid
+            self._next_wid += 1
+            self.store.joins += 1
+            return wid
+
+    # --------------------------------------------------------------- serving
+
+    def _serve(self, conn):
+        store = self.store
+        wid = None
+        try:
+            verb, requested = conn.recv()
+            if verb != "hello":
+                conn.close()
+                return
+            wid = self._assign_wid(requested)
+            conn.send(("welcome", wid, self.meta))
+            while True:
+                msg = conn.recv()
+                verb = msg[0]
+                if verb == "pull":
+                    grant = store.replay_pull(wid)
+                    if grant is None:
+                        conn.send(("done",))
+                    else:
+                        W, fetch_v, rows = grant
+                        conn.send(("work", W, fetch_v, rows))
+                elif verb == "push":
+                    _, _, g, read_v = msg
+                    conn.send(("applied", store.replay_push(wid, g, read_v)))
+                elif verb == "step":
+                    _, _, g, read_v, rows, w_fetch = msg
+                    out = store.live_step(wid, g, read_v, rows, w_fetch)
+                    conn.send(("done",) if out is None else ("work",) + out)
+                elif verb == "bye":
+                    break
+                else:
+                    raise ValueError(f"unknown verb {verb!r} from worker {wid}")
+        except (EOFError, ConnectionResetError, BrokenPipeError, OSError):
+            # worker died mid-stream (kill/crash): tolerated, counted
+            with store.cond:
+                store.worker_exits += 1
+                store.cond.notify_all()
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass

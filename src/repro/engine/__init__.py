@@ -1,4 +1,6 @@
-"""repro.engine — the unified Experiment/Trainer API over all three backends.
+"""repro.engine — the unified Experiment/Trainer API over all four backends
+(sim | scan | mesh | dist — the last is the real multi-process async
+parameter server of repro.dist, DESIGN.md §10).
 
     from repro.engine import ExperimentSpec, Trainer
 

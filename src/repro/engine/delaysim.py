@@ -53,20 +53,9 @@ from repro.kernels.guided_update.kernel import (
 )
 
 # ------------------------------------------------------------- topologies
-# Per-dispatch compute-time samplers for the event-queue schedule generator
-# (core.parameter_server._event_schedule). `None` keeps the reference loop's
-# literal draw (rng.exponential(1.0) + 0.1), preserving rng-stream parity.
-# "seq" and "barrier" are the deterministic topologies of those modes and
-# need no sampler.
-TOPOLOGY_SAMPLERS = {
-    "seq": None,
-    "barrier": None,
-    "exp": None,
-    "constant": lambda w, rng: 1.0,
-    "heavy_tail": lambda w, rng: 0.1 + rng.pareto(1.5),
-    "straggler": lambda w, rng: (10.0 if w == 0 else 1.0) * rng.exponential(1.0) + 0.1,
-    "hetero": lambda w, rng: rng.exponential(0.5 * (w + 2)) + 0.1,
-}
+# Hoisted to repro.common.topologies (one source of truth shared with the
+# dist fault injector); re-exported here for compat.
+from repro.common.topologies import TOPOLOGY_SAMPLERS  # noqa: F401, E402
 
 
 def _x64():
@@ -108,15 +97,9 @@ def _aug(X):
 # ------------------------------------------------------------ scan runner
 
 
-def _shim_state(i, Wf, prev_avg, c: int):
-    """Minimal GuidedState for the mesh-hook signatures: the scan path only
-    guarantees w_stale (what compensate_grads reads); window bookkeeping lives
-    in the scan carry instead."""
-    from repro.core.guided import GuidedState
-
-    z = jnp.zeros((c,), Wf.dtype)
-    return GuidedState(step=i, score=z, prev_worker_loss=z,
-                       prev_avg_loss=prev_avg, w_stale=Wf, opt_state=(), extra=())
+# _shim_state moved to repro.engine.strategies.sim_shim_state: the dist
+# chief drives the same hooks on live pushes and needs the identical shim.
+from repro.engine.strategies import sim_shim_state as _shim_state  # noqa: E402
 
 
 # Bounded LRU of jitted runners. Every distinct (shapes, strategy, config)

@@ -30,8 +30,22 @@ from repro.core.parameter_server import PSConfig
 if TYPE_CHECKING:  # GuidedConfig lives in the jax stack; import it lazily so
     from repro.core.guided import GuidedConfig  # sim-only scripts stay numpy-light
 
-BACKENDS = ("mesh", "sim", "scan")
+BACKENDS = ("mesh", "sim", "scan", "dist")
 MODES = ("seq", "ssgd", "asgd")
+
+# dist-backend execution disciplines (repro.dist, DESIGN.md §10):
+#   replay — real worker processes, scheduled interleaving: the chief grants
+#            pulls/pushes against the extracted DelaySchedule, so the run is
+#            deterministic and parity-checkable against backend="scan".
+#   live   — free-running asynchrony: staleness is observed, not scripted;
+#            the fault-injection knobs (events, drop rate, slowdowns) and
+#            DaSGD delayed averaging only exist here.
+DIST_MODES = ("replay", "live")
+
+# fault-injection event verbs: ("kill", wid, at_version) terminates worker
+# wid's process once the store reaches at_version; "restart" kills AND
+# respawns it; "join" spawns an additional elastic worker (wid ignored).
+DIST_EVENT_OPS = ("kill", "restart", "join")
 
 # mesh-backend lr schedules; kept as a pure-python tuple (the resolver lives
 # in repro.optim.schedules.for_run, which imports jax) so the spec and the
@@ -115,8 +129,16 @@ class ExperimentSpec:
     verification_frac: float = 0.2
     rmsprop_beta: float = 0.9
     eps: float = 1e-8
-    topology: str = ""             # scan: TOPOLOGIES key ("" -> mode default)
+    topology: str = ""             # scan/dist: TOPOLOGIES key ("" -> mode default)
     n_seeds: int = 1               # scan: vmap-sweep seed..seed+n_seeds-1
+    # ------------------------------------------------------------ dist knobs
+    dist_mode: str = "replay"      # replay | live (DIST_MODES)
+    delayed_avg: bool = False      # live: DaSGD-style push/pull overlap + merge
+    dist_drop_rate: float = 0.0    # live: chief drops this fraction of pushes
+    dist_time_scale: float = 0.0   # live: seconds per sampled compute-time unit
+                                   # (0 -> workers never sleep; full speed)
+    dist_events: Tuple = ()        # live: ((op, wid, at_version), ...) faults
+    dist_timeout: float = 120.0    # watchdog: max seconds without progress
     # ------------------------------------------------------------ mesh knobs
     arch: str = "yi_9b"
     reduced: bool = True
@@ -128,6 +150,7 @@ class ExperimentSpec:
     warmup: int = 10
     mesh: str = "local"            # local | host | prod | prod-multipod
     workers: int = 0               # paper's c; 0 -> data shards of the mesh
+                                   # (dist: worker PROCESSES; 0 -> schedule's c)
     micro: int = 1                 # gradient-accumulation microbatches
     staleness: int = 0             # asgd: w_stale refresh period (0 -> rho)
     chunk_steps: int = 1           # fuse K steps into one lax.scan dispatch
@@ -177,9 +200,9 @@ class ExperimentSpec:
                     f"unknown topology {self.topology!r}; known: "
                     f"{', '.join(TOPOLOGIES)}"
                 )
-            if self.backend != "scan":
+            if self.backend not in ("scan", "dist"):
                 raise ValueError(
-                    f"topology={self.topology!r} is a scan-backend knob "
+                    f"topology={self.topology!r} is a scan/dist-backend knob "
                     f"(backend={self.backend!r} hardcodes its delay model)"
                 )
             if self.mode not in TOPOLOGIES[self.topology]:
@@ -187,6 +210,34 @@ class ExperimentSpec:
                     f"topology {self.topology!r} is defined for mode(s) "
                     f"{TOPOLOGIES[self.topology]}, got mode={self.mode!r}"
                 )
+        # ---- dist-backend rules: fail at construction, not mid-launch
+        if self.dist_mode not in DIST_MODES:
+            raise ValueError(
+                f"unknown dist_mode {self.dist_mode!r}; known: {', '.join(DIST_MODES)}")
+        faults = (self.delayed_avg or self.dist_drop_rate or self.dist_time_scale
+                  or self.dist_events)
+        if self.backend == "dist":
+            if self.dist_mode == "live" and self.mode != "asgd":
+                raise ValueError(
+                    f"dist_mode='live' IS free-running asynchronous execution: "
+                    f"use mode='asgd' (got mode={self.mode!r})")
+            if faults and self.dist_mode != "live":
+                raise ValueError(
+                    "delayed_avg / dist_drop_rate / dist_time_scale / "
+                    "dist_events need dist_mode='live' (replay is the "
+                    "deterministic parity oracle — no faults there)")
+            for ev in self.dist_events:
+                if len(ev) != 3 or ev[0] not in DIST_EVENT_OPS:
+                    raise ValueError(
+                        f"bad dist event {ev!r}; want (op, wid, at_version) "
+                        f"with op in {DIST_EVENT_OPS}")
+            if not (0.0 <= self.dist_drop_rate < 1.0):
+                raise ValueError(
+                    f"dist_drop_rate must be in [0, 1) (got {self.dist_drop_rate})")
+        elif faults:
+            raise ValueError(
+                "delayed_avg / dist_drop_rate / dist_time_scale / dist_events "
+                f"are dist-backend knobs (backend={self.backend!r})")
 
     @property
     def resolved_topology(self) -> str:

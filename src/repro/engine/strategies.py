@@ -121,6 +121,15 @@ class DelayCompensator:
         return W - lr * jnp.tensordot(sel, window_grads[top_i], axes=1)
 
 
+def sim_shim_state(i, Wf, prev_avg, c: int) -> G.GuidedState:
+    """Minimal GuidedState for the mesh-hook signatures on the single-matrix
+    backends (scan sim, dist chief): only w_stale is guaranteed (what
+    compensate_grads reads); window bookkeeping lives in the caller's carry."""
+    z = jnp.zeros((c,), Wf.dtype)
+    return G.GuidedState(step=i, score=z, prev_worker_loss=z,
+                         prev_avg_loss=prev_avg, w_stale=Wf, opt_state=(), extra=())
+
+
 def _fused_weights(state: G.GuidedState, gcfg: G.GuidedConfig, c: int):
     """(c,) top-k consistency weights at window end, zeros otherwise."""
     return jnp.where(

@@ -64,6 +64,12 @@ class Report:
                                # record count — resume/history granularity safe
     start_step: int = 0        # mesh: step resumed from (0 = fresh run)
     interrupted: bool = False  # mesh: SIGTERM cut the run short (state saved)
+    staleness_hist: dict = dataclasses.field(default_factory=dict)
+                               # dist: OBSERVED staleness -> count over every
+                               # applied update (applied_version - read_version)
+    dist: dict = dataclasses.field(default_factory=dict)
+                               # dist: run diagnostics (mode, n_workers, drops,
+                               # late, worker_exits, joins)
 
     @property
     def final_loss(self) -> Optional[float]:
@@ -96,7 +102,7 @@ class Trainer:
 
             # resolve eagerly so unknown names fail at from_spec, not mid-fit
             self.strategy = resolve_strategy(spec.to_guided_config(), spec.strategy)
-        elif spec.backend == "scan":
+        elif spec.backend in ("scan", "dist"):
             from repro.engine.strategies import get_compensator
 
             self.strategy = get_compensator(spec.strategy, spec.to_guided_config())
@@ -152,19 +158,20 @@ class Trainer:
         same stream an uninterrupted run would have seen.
         """
         t0 = time.perf_counter()
-        if self.spec.backend in ("sim", "scan"):
+        if self.spec.backend in ("sim", "scan", "dist"):
             if steps is not None or on_step is not None:
                 raise ValueError(
-                    "steps/on_step apply to the mesh backend; the sim/scan "
-                    "backends run the paper's epoch protocol (set spec.epochs)"
+                    "steps/on_step apply to the mesh backend; the sim/scan/"
+                    "dist backends run the paper's epoch protocol (set "
+                    "spec.epochs)"
                 )
             if resume:
                 raise ValueError(
-                    "resume applies to the mesh backend; sim/scan runs are "
-                    "single jit/process calls with nothing to resume into"
+                    "resume applies to the mesh backend; sim/scan/dist runs "
+                    "are single fit calls with nothing to resume into"
                 )
-            report = (self._fit_sim(data) if self.spec.backend == "sim"
-                      else self._fit_scan(data))
+            report = {"sim": self._fit_sim, "scan": self._fit_scan,
+                      "dist": self._fit_dist}[self.spec.backend](data)
             n_total = report.n_steps * self.spec.n_seeds
         else:
             report = self._fit_mesh(data, steps, on_step, keep_history, resume)
@@ -208,6 +215,24 @@ class Trainer:
         return Report(backend="scan", spec=self.spec, history=res["history"],
                       final=final, model=res["model"],
                       n_steps=res.get("n_steps", len(res["history"])))
+
+    def _fit_dist(self, data) -> Report:
+        """The real multi-process async parameter server (repro.dist): same
+        data contract as sim/scan. Report additionally carries the OBSERVED
+        staleness histogram and the dist diagnostics (drops, worker exits,
+        elastic joins) — the quantities the simulators can only assume."""
+        from repro.dist import launcher
+
+        if data is None:
+            raise ValueError("dist backend needs data=(X, y, n_classes[, Xtest, ytest])")
+        X, y, n_classes, *rest = data
+        Xtest, ytest = (rest + [None, None])[:2]
+        res = launcher.run_local(self.spec, X, y, n_classes, Xtest, ytest,
+                                 strategy=self.strategy)
+        final = {k: res[k] for k in ("train_loss", "val_loss", "test_accuracy") if k in res}
+        return Report(backend="dist", spec=self.spec, history=res["history"],
+                      final=final, model=res["model"], n_steps=res["n_steps"],
+                      staleness_hist=res["staleness_hist"], dist=res["dist"])
 
     def _fit_mesh(self, data, steps, on_step, keep_history=True, resume=False) -> Report:
         from repro.engine import trainloop

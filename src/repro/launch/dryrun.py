@@ -17,11 +17,16 @@ Per combination this:
      n_super x block terms (see EXPERIMENTS.md §Roofline for the arithmetic),
   5. writes results/dryrun/<arch>__<shape>__<mesh>[__<rules>].json.
 """
-# The 512 placeholder devices MUST be configured before jax initializes.
+# The placeholder devices MUST be configured before jax initializes. 512
+# covers the production meshes (16x16 and 2x16x16); REPRO_DRYRUN_DEVICES
+# overrides it so small-mesh self-generation (--small, used by the roofline
+# benchmark on CI) doesn't pay 512 threadpools for an 8-device mesh.
 import os
 
+_FORCED_DEVICES = int(os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
 os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+    f"--xla_force_host_platform_device_count={_FORCED_DEVICES} "
+    + os.environ.get("XLA_FLAGS", "")
 )
 
 import argparse
@@ -37,7 +42,7 @@ import numpy as np
 
 from repro.configs import INPUT_SHAPES, ARCH_IDS, get_config
 from repro.core.guided import GuidedConfig
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, make_small_mesh
 from repro.models import transformer as T
 from repro.models.module import split_params
 from repro.optim import constant, get_optimizer
@@ -155,6 +160,8 @@ def _dedup_start_done(txt: str) -> str:
 
 def analyze_compiled(compiled):
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     txt = _dedup_start_done(compiled.as_text())
     coll = collective_bytes_from_hlo(txt)
@@ -235,9 +242,10 @@ def lower_train(cfg, ctx, gcfg, opt_name, n_micro: int = 1):
 
 def run_one(arch, shape_name, multi_pod, rules_name="default", opt_name="sgd",
             correction="fused", out_dir="results/dryrun", block_too=True,
-            moe_impl="gather", micro_override=0, attn_impl="", kv_cache=""):
+            moe_impl="gather", micro_override=0, attn_impl="", kv_cache="",
+            small=False):
     t0 = time.time()
-    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    mesh_name = "mesh4x2" if small else ("pod2x16x16" if multi_pod else "pod16x16")
     variant = "" if rules_name == "default" else f"__{rules_name}"
     if moe_impl != "gather":
         variant += f"__moe-{moe_impl}"
@@ -268,7 +276,19 @@ def run_one(arch, shape_name, multi_pod, rules_name="default", opt_name="sgd",
         return record
 
     shape = INPUT_SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if small:
+        # --small: compile the reduced config on an 8-chip (4x2) mesh with a
+        # shrunk shape so the whole dry-run finishes in seconds on a CPU host
+        # (REPRO_DRYRUN_DEVICES=8). Same lowering path, same record format —
+        # only mesh_name/"mesh4x2" distinguishes these from production runs.
+        cfg = cfg.reduced()
+        shape = dataclasses.replace(
+            shape,
+            seq_len=min(shape.seq_len, 128 if kind == "train" else 256),
+            global_batch=min(shape.global_batch, 8))
+        mesh = make_small_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     ctx = build_ctx(mesh, multi_pod, rules_name, moe_impl)
     chips = int(np.prod(list(mesh.shape.values())))
 
@@ -453,17 +473,22 @@ def main():
     ap.add_argument("--kv", default="", choices=["", "native", "int8"])
     ap.add_argument("--no-block", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--small", action="store_true",
+                    help="reduced config on a 4x2 mesh with shrunk shapes "
+                         "(set REPRO_DRYRUN_DEVICES=8; used by bench_roofline)")
     args = ap.parse_args()
 
     archs = [a for a in ARCH_IDS if a != "paper_logreg"] if args.all or not args.arch else [args.arch.replace("-", "_")]
     shapes = list(INPUT_SHAPES) if args.all or not args.shape else [args.shape]
     pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    if args.small:
+        pods = [False]  # the small mesh has no pod axis
 
     failures = 0
     for mp in pods:
         for arch in archs:
             for shp in shapes:
-                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                mesh_name = "mesh4x2" if args.small else ("pod2x16x16" if mp else "pod16x16")
                 variant = "" if args.rules == "default" else f"__{args.rules}"
                 if args.moe_impl != "gather":
                     variant += f"__moe-{args.moe_impl}"
@@ -482,7 +507,8 @@ def main():
                 rec = run_one(arch, shp, mp, args.rules, args.optimizer, args.correction,
                               args.out, block_too=not args.no_block,
                               moe_impl=args.moe_impl, micro_override=args.micro,
-                              attn_impl=args.attn_impl, kv_cache=args.kv)
+                              attn_impl=args.attn_impl, kv_cache=args.kv,
+                              small=args.small)
                 failures += 0 if rec.get("ok") else 1
     print(f"[dryrun] done, failures={failures}")
     raise SystemExit(1 if failures else 0)

@@ -19,6 +19,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
+def make_small_mesh():
+    """4x2 = 8 placeholder chips (data, model): the --small dry-run mesh the
+    roofline benchmark self-generates records on (REPRO_DRYRUN_DEVICES=8)."""
+    return make_mesh((4, 2), ("data", "model"))
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over real local devices (tests / CPU examples)."""
     n = len(jax.devices())

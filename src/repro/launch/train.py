@@ -21,6 +21,19 @@ snapshot that silently dropped the entire GuidedState.)
 
 Any strategy registered with @register_compensator is selectable here by name
 without touching this file or the train step.
+
+Multi-process async training (repro.dist, DESIGN.md §10): --backend dist runs
+a REAL parameter server — a chief process owning the versioned store plus
+--dist-workers gradient-pushing worker processes — on the paper's tabular
+datasets:
+
+  PYTHONPATH=src python -m repro.launch.train --backend dist --dataset pima \
+      --mode asgd --strategy dc_asgd --dist-mode live --dist-workers 4 \
+      --epochs 20 --dist-events restart:0@50
+
+--role splits the same run across terminals/hosts: `--role chief` starts only
+the store+listener (printing the address), `--role worker --addr host:port`
+runs one worker process (equivalent to `python -m repro.dist.worker`).
 """
 from __future__ import annotations
 
@@ -34,7 +47,24 @@ from repro.engine.spec import SCHEDULES
 # build_ctx re-exported for back-compat (serve and older scripts imported it here)
 
 
-def spec_from_args(args) -> ExperimentSpec:
+def parse_dist_events(text: str) -> tuple:
+    """'op:wid@version,...' -> ((op, wid, version), ...); e.g.
+    'restart:0@50,join:0@80' kills+respawns worker 0 at store version 50 and
+    joins an elastic worker at 80."""
+    events = []
+    for part in filter(None, (p.strip() for p in text.split(","))):
+        try:
+            op, rest = part.split(":", 1)
+            wid, at = rest.split("@", 1)
+            events.append((op, int(wid), int(at)))
+        except ValueError:
+            raise SystemExit(
+                f"bad --dist-events entry {part!r}; want op:wid@version "
+                f"(e.g. restart:0@50)") from None
+    return tuple(events)
+
+
+def _resolve_strategy_mode(args):
     strategy = args.strategy
     mode = args.mode
     if mode == "dc_asgd":  # legacy spelling: execution mode asgd + Taylor strategy
@@ -42,6 +72,37 @@ def spec_from_args(args) -> ExperimentSpec:
         strategy = strategy or ("dc_asgd_guided" if args.guided else "dc_asgd")
     if not strategy:
         strategy = "guided_fused" if args.guided else "none"
+    return strategy, mode
+
+
+def dist_spec_from_args(args) -> ExperimentSpec:
+    strategy, mode = _resolve_strategy_mode(args)
+    return ExperimentSpec(
+        backend="dist",
+        mode=mode,
+        strategy=strategy,
+        rho=args.rho,
+        optimizer=args.optimizer,
+        lr=args.lr,
+        seed=args.seed,
+        epochs=args.epochs,
+        batch_size=args.batch_size,
+        topology=args.topology,
+        workers=args.dist_workers,
+        dist_mode=args.dist_mode,
+        delayed_avg=args.delayed_avg,
+        dist_drop_rate=args.drop_rate,
+        dist_time_scale=args.time_scale,
+        dist_events=parse_dist_events(args.dist_events),
+        dist_timeout=args.dist_timeout,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        keep_last=args.keep_last,
+    )
+
+
+def spec_from_args(args) -> ExperimentSpec:
+    strategy, mode = _resolve_strategy_mode(args)
     overrides = []
     if args.layers:
         overrides.append(("n_layers", args.layers))
@@ -75,9 +136,43 @@ def spec_from_args(args) -> ExperimentSpec:
     )
 
 
+def run_dist(args):
+    """The --backend dist path: real multi-process async training on the
+    paper's tabular datasets. Returns the launcher's result dict."""
+    from repro.data import load_dataset, train_test_split
+    from repro.dist import launcher
+
+    spec = dist_spec_from_args(args)
+    X, y, n_classes = load_dataset(args.dataset, seed=0)
+    Xtr, ytr, Xte, yte = train_test_split(X, y, seed=spec.seed)
+    t0 = time.time()
+    res = launcher.run_local(spec, Xtr, ytr, n_classes, Xte, yte,
+                             spawn=args.role == "auto", port=args.port)
+    dt = time.time() - t0
+    d = res["dist"]
+    print(f"dist[{spec.dist_mode}] {args.dataset}: {res['n_steps']} server steps "
+          f"in {dt:.1f}s ({res['n_steps'] / max(dt, 1e-9):.1f} steps/s), "
+          f"val_loss {res['val_loss']:.4f}, test_acc "
+          f"{res.get('test_accuracy', float('nan')):.4f}")
+    print(f"observed staleness histogram: {res['staleness_hist']}")
+    print(f"workers {d['n_workers']}, drops {d['drops']}, late {d['late']}, "
+          f"exits {d['worker_exits']}, joins {d['joins']}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump({"n_steps": res["n_steps"], "val_loss": res["val_loss"],
+                       "test_accuracy": res.get("test_accuracy"),
+                       "staleness_hist": {str(k): v for k, v in res["staleness_hist"].items()},
+                       "dist": d, "wall_time_s": dt}, f, indent=1)
+    return res
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--backend", default="mesh", choices=["mesh", "dist"],
+                    help="mesh: jitted SPMD trainer (default); dist: real "
+                         "multi-process async parameter server (repro.dist)")
+    ap.add_argument("--arch", default="",
+                    help="model architecture (required for --backend mesh)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--layers", type=int, default=0, help="override n_layers")
     ap.add_argument("--d-model", type=int, default=0)
@@ -115,7 +210,52 @@ def main(argv=None):
                     help="resume bit-exactly from the latest manifest entry in --ckpt-dir")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics-out", default="")
+    # ------------------------------------------------ dist backend (repro.dist)
+    ap.add_argument("--role", default="auto", choices=["auto", "chief", "worker"],
+                    help="auto: chief spawns its own workers; chief: listen "
+                         "only (workers launched separately); worker: run one "
+                         "worker against --addr")
+    ap.add_argument("--addr", default="",
+                    help="chief address host:port (--role worker)")
+    ap.add_argument("--port", type=int, default=0,
+                    help="chief listen port (0 = ephemeral)")
+    ap.add_argument("--dataset", default="pima",
+                    help="tabular dataset for --backend dist (repro.data)")
+    ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--topology", default="",
+                    help="delay/worker-speed topology ('' = mode default)")
+    ap.add_argument("--dist-mode", default="replay", choices=["replay", "live"],
+                    help="replay: deterministic schedule-granted interleaving "
+                         "(parity oracle); live: free-running asynchrony with "
+                         "observed staleness + fault injection")
+    ap.add_argument("--dist-workers", type=int, default=0,
+                    help="worker processes (0 = the schedule's c = rho)")
+    ap.add_argument("--delayed-avg", action="store_true",
+                    help="DaSGD-style delayed averaging: overlap push/pull "
+                         "with the next local step, merge on reply (live)")
+    ap.add_argument("--drop-rate", type=float, default=0.0,
+                    help="fraction of pushes the chief drops (live)")
+    ap.add_argument("--time-scale", type=float, default=0.0,
+                    help="seconds per sampled compute-time unit (live; 0 = "
+                         "full speed)")
+    ap.add_argument("--dist-events", default="",
+                    help="fault plan op:wid@version,... with op in "
+                         "kill|restart|join (live), e.g. restart:0@50")
+    ap.add_argument("--dist-timeout", type=float, default=120.0,
+                    help="watchdog: max seconds without store progress")
     args = ap.parse_args(argv)
+
+    if args.role == "worker":
+        from repro.dist.worker import main as worker_main
+
+        if not args.addr:
+            raise SystemExit("--role worker needs --addr host:port")
+        return worker_main(["--addr", args.addr])
+    if args.backend == "dist":
+        return run_dist(args)
+    if not args.arch:
+        raise SystemExit("--backend mesh needs --arch")
 
     spec = spec_from_args(args)
     trainer = Trainer.from_spec(spec)
