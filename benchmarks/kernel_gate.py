@@ -1,0 +1,98 @@
+"""CI kernel perf gate: fail loudly when a fused kernel regresses vs baseline.
+
+Compares a freshly measured BENCH_kernels.json against the committed baseline
+on the fused/unfused SPEEDUP ratio per (kernel, dtype, n) — a ratio of two
+wall times on the same box, so it travels across machines where absolute
+microseconds don't. A kernel regresses when its fresh speedup falls more than
+`--tol` (default 20%) below the baseline's. Parity is gated absolutely:
+1e-6 for float32 entries, 1e-12 for float64 (the repo's acceptance bars).
+
+Only keys present in BOTH files are compared (CI runs the --small size set;
+the committed baseline carries the full sweep), so trimming sizes in CI never
+trips the gate. Speedup is gated only at n >= --min-n (default 64k): below
+that the update is dispatch-overhead-bound and the ratio too noisy for a 20%
+gate on shared runners — parity is still checked at every size. Exit 0 =
+pass, 1 = regression/parity failure, 2 = unusable inputs (missing file, no
+common keys) — also a failure, loudly.
+
+Usage:
+    python benchmarks/kernel_gate.py --baseline BENCH_kernels.json \
+        --fresh /tmp/fresh.json [--tol 0.2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PARITY_BAR = {"float32": 1e-6, "float64": 1e-12}
+
+
+def _index(doc: dict) -> dict:
+    return {(e["kernel"], e["dtype"], e["n"]): e for e in doc.get("entries", [])}
+
+
+def gate(baseline: dict, fresh: dict, tol: float = 0.2,
+         min_n: int = 65536) -> list[str]:
+    """Returns a list of human-readable failures (empty = pass)."""
+    base = _index(baseline)
+    new = _index(fresh)
+    common = sorted(set(base) & set(new))
+    if not common:
+        return ["no common (kernel, dtype, n) keys between baseline and fresh "
+                f"(baseline has {len(base)}, fresh has {len(new)})"]
+    failures = []
+    for key in common:
+        b, f = base[key], new[key]
+        kernel, dtype, n = key
+        floor = b["speedup"] * (1.0 - tol)
+        if n >= min_n and f["speedup"] < floor:
+            failures.append(
+                f"{kernel} n={n} {dtype}: speedup {f['speedup']:.2f}x < "
+                f"{floor:.2f}x (baseline {b['speedup']:.2f}x - {tol:.0%})")
+        bar = PARITY_BAR.get(dtype)
+        if bar is not None and f["parity_max_abs_diff"] > bar:
+            failures.append(
+                f"{kernel} n={n} {dtype}: parity {f['parity_max_abs_diff']:.3g}"
+                f" > {bar:g} vs optimizers reference")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_kernels.json",
+                    help="committed baseline JSON")
+    ap.add_argument("--fresh", required=True, help="freshly measured JSON")
+    ap.add_argument("--tol", type=float, default=0.2,
+                    help="allowed fractional speedup regression (default 0.2)")
+    ap.add_argument("--min-n", type=int, default=65536,
+                    help="gate speedup only at sizes >= this (default 64k; "
+                         "smaller sizes are dispatch-bound and noisy)")
+    args = ap.parse_args(argv)
+
+    docs = {}
+    for label, path in (("baseline", args.baseline), ("fresh", args.fresh)):
+        try:
+            with open(path) as fh:
+                docs[label] = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"KERNEL GATE ERROR: cannot read {label} {path!r}: {e}",
+                  file=sys.stderr)
+            return 2
+
+    failures = gate(docs["baseline"], docs["fresh"], tol=args.tol,
+                    min_n=args.min_n)
+    n_keys = len(set(_index(docs["baseline"])) & set(_index(docs["fresh"])))
+    if failures:
+        print(f"KERNEL PERF GATE: FAIL ({len(failures)} regression(s) across "
+              f"{n_keys} compared entries, tol={args.tol:.0%})", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1 if n_keys else 2
+    print(f"KERNEL PERF GATE: PASS ({n_keys} entries within {args.tol:.0%} "
+          f"of baseline speedup; parity within bars)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

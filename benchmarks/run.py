@@ -157,11 +157,27 @@ def bench_guided_at_scale(full: bool):
     return out
 
 
-def bench_kernels():
+def bench_kernels(small: bool = False, out_path: str = "BENCH_kernels.json"):
+    """Kernel micro rows + the fused whole-update suite; the JSON artifact is
+    the baseline `benchmarks/kernel_gate.py` gates CI against (20% tolerance
+    on the fused/unfused speedup ratio, which travels across machines where
+    absolute wall times don't)."""
+    import json
+
     from benchmarks.kernels_bench import bench_all
 
-    for name, us, derived in bench_all():
-        print(f"{name},{us:.1f},{derived}")
+    out, us = _timed(lambda: bench_all(small=small))
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    for name, row_us, derived in out["micro"]:
+        print(f"{name},{row_us:.1f},{derived}")
+    big = [e["speedup"] for e in out["entries"] if e["n"] >= 65536]
+    worst = min(big) if big else float("nan")
+    par = max(e["parity_max_abs_diff"] for e in out["entries"])
+    print(f"kernels_fused_vs_unfused,{us:.0f},"
+          f"worst_speedup_64k+={worst:.2f}x;entries={len(out['entries'])};"
+          f"max_parity={par:.2g};impl={out['entries'][0]['impl']}")
+    return out
 
 
 def bench_delaysim(full: bool, out_path: str = "BENCH_delaysim.json"):
@@ -332,6 +348,9 @@ def _clear_jit_runners():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper protocol (30x50)")
+    ap.add_argument("--small", action="store_true",
+                    help="CI mode: trim the kernel fused suite to the sizes "
+                         "the perf gate compares")
     ap.add_argument("--only", default="",
                     help="comma list: tables,variants,rho,progression,roofline,"
                          "kernels,scale,delaysim,serve,ckpt,train,dist")
@@ -358,7 +377,7 @@ def main() -> None:
     if want("scale"):
         bench_guided_at_scale(args.full)
     if want("kernels"):
-        bench_kernels()
+        bench_kernels(small=args.small)
     if want("delaysim"):
         bench_delaysim(args.full)
         _clear_jit_runners()

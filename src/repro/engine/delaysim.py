@@ -47,10 +47,7 @@ from repro.core.parameter_server import (  # noqa: F401  (DelaySchedule re-expor
 )
 from repro.engine.spec import ExperimentSpec
 from repro.engine.strategies import DelayCompensator, get_compensator
-from repro.kernels.guided_update.kernel import (
-    guided_rmsprop_update_raw,
-    guided_sgd_update_raw,
-)
+from repro.kernels.guided_update.ops import FUSED_ACC_ARITY, fused_update_for
 
 # ------------------------------------------------------------- topologies
 # Hoisted to repro.common.topologies (one source of truth shared with the
@@ -120,25 +117,43 @@ def clear_runners() -> None:
 
 
 def _build_runner(key, strategy: DelayCompensator, T: int, n_classes: int,
-                  R: int, rho: int, c: int, optimizer: str, fused_dc: bool):
-    """Compile (LRU-cached) the vmapped scan for one static configuration."""
+                  R: int, rho: int, c: int, optimizer: str, fused_dc: bool,
+                  beta: float, eps: float):
+    """Compile (LRU-cached) the vmapped scan for one static configuration.
+    `beta`/`eps` are python floats, baked into the trace (same values the
+    reference loop uses, so the f64 parity regime is unchanged)."""
     if key in _RUNNERS:
         _RUNNERS.move_to_end(key)
         return _RUNNERS[key]
     guided = strategy.sim_guided
 
-    def apply_update(W, g, Wf, r, lr, lam, beta, eps):
-        if optimizer == "sgd":
-            return guided_sgd_update_raw(W, g, Wf, lr, lam), r
-        if optimizer == "rmsprop":
-            return guided_rmsprop_update_raw(W, g, Wf, r, lr, lam, beta, eps)
+    # Whole-update apply path (DESIGN.md §11): the strategy registry selects
+    # the optimizer-fused kernel via sim_kernel — compensation (lam), the
+    # accumulator recurrence and the weight apply in ONE dispatch. None means
+    # two-phase: compensate_grads already ran in the scan body (fused_dc is
+    # False there), so the same kernel applies plain with the traced lam=0.
+    # adagrad keeps its 3-op inline XLA form (no fused kernel; the lam fold
+    # stays inline exactly as before, preserving the dc_asgd f64 ordering).
+    hypers = {"rmsprop": dict(beta=beta, eps=eps),
+              "momentum": dict(beta=0.9),
+              "adam": dict(b1=0.9, b2=0.999, eps=eps)}.get(optimizer, {})
+    kern = None
+    if optimizer != "adagrad":
+        kern = strategy.sim_kernel(optimizer, impl="kernel", **hypers)
+        if kern is None:
+            kern = fused_update_for(optimizer, impl="kernel", **hypers)
+    n_acc = 1 if optimizer == "adagrad" else FUSED_ACC_ARITY[optimizer]
+
+    def apply_update(W, g, Wf, acc, i, lr, lam):
         if optimizer == "adagrad":
+            (r,) = acc
             gt = g + lam * g * g * (W - Wf)
             r = r + gt * gt
-            return W - lr * gt / jnp.sqrt(r + eps), r
-        raise ValueError(optimizer)
+            return W - lr * gt / jnp.sqrt(r + eps), (r,)
+        # i+1 = the already-incremented adam step; ignored by the others
+        return kern(W, g, Wf, acc, i + 1, lr, lam)
 
-    def one_seed(W0, Xa_all, rows, yb, Xv, yv, stale, lr, lam, beta, eps):
+    def one_seed(W0, Xa_all, rows, yb, Xv, yv, stale, lr, lam):
         P, k = W0.shape
         rho_w = max(rho, 1)
         # hoisted out of the scan: batch gather (T*bs rows) + one-hot labels
@@ -147,14 +162,14 @@ def _build_runner(key, strategy: DelayCompensator, T: int, n_classes: int,
         yv_oh = jax.nn.one_hot(yv, k, dtype=W0.dtype)
 
         def step(carry, xs):
-            W, ring, r, prev_avg, wscore, wgrads = carry
+            W, ring, acc, prev_avg, wscore, wgrads = carry
             i, Xa, yoh, s = xs
             Wf = jnp.take(ring, jnp.mod(i - s, R), axis=0)
             g = _grad(Wf, Xa, yoh)
             if not fused_dc:
                 g = strategy.compensate_grads(g, W, _shim_state(i, Wf, prev_avg, c))
             loss_before = _loss(W, Xa, yoh) if guided else 0.0
-            W2, r2 = apply_update(W, g, Wf, r, lr, lam, beta, eps)
+            W2, acc2 = apply_update(W, g, Wf, acc, i, lr, lam)
             avg = _loss(W2, Xv, yv_oh)
             if guided:
                 d_avg = avg - prev_avg
@@ -169,12 +184,12 @@ def _build_runner(key, strategy: DelayCompensator, T: int, n_classes: int,
             else:
                 W3 = W2
             ring = ring.at[jnp.mod(i + 1, R)].set(W3)
-            return (W3, ring, r2, avg, wscore, wgrads), avg
+            return (W3, ring, acc2, avg, wscore, wgrads), avg
 
         carry0 = (
             W0,
             jnp.tile(W0[None], (R, 1, 1)),
-            jnp.zeros_like(W0),
+            tuple(jnp.zeros_like(W0) for _ in range(n_acc)),
             jnp.asarray(jnp.inf, W0.dtype),
             jnp.zeros((rho_w,), W0.dtype),
             jnp.zeros((rho_w, P, k), W0.dtype),
@@ -183,7 +198,7 @@ def _build_runner(key, strategy: DelayCompensator, T: int, n_classes: int,
         carry, avgs = jax.lax.scan(step, carry0, xs)
         return carry[0], avgs
 
-    fn = jax.jit(jax.vmap(one_seed, in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, None, None)))
+    fn = jax.jit(jax.vmap(one_seed, in_axes=(0, 0, 0, 0, 0, 0, 0, None, None)))
     _RUNNERS[key] = fn
     while len(_RUNNERS) > _RUNNERS_MAX:
         _RUNNERS.popitem(last=False)
@@ -257,17 +272,18 @@ def run(spec: ExperimentSpec, X, y, n_classes: int, Xtest=None, ytest=None,
         type(strategy).__module__, type(strategy).__qualname__, spec.strategy,
         gcfg, T, n_classes, W0.shape[1], Xa_all.shape[1], rows.shape[2],
         Xv.shape[1], R, spec.rho, spec.max_consistent, spec.optimizer,
-        bool(fused_lam), spec.n_seeds, jax.default_backend() == "tpu",
+        bool(fused_lam), float(spec.rmsprop_beta), float(spec.eps),
+        spec.n_seeds, jax.default_backend() == "tpu",
     )
     with _x64():
         fn = _build_runner(key, strategy, T, n_classes, R, spec.rho,
-                           schedules[0].n_workers, spec.optimizer, bool(fused_lam))
+                           schedules[0].n_workers, spec.optimizer, bool(fused_lam),
+                           float(spec.rmsprop_beta), float(spec.eps))
         Wf, avgs = fn(
             jnp.asarray(W0),
             jnp.asarray(Xa_all), jnp.asarray(rows, jnp.int32), jnp.asarray(yb, jnp.int32),
             jnp.asarray(Xv), jnp.asarray(yv, jnp.int32), jnp.asarray(stale, jnp.int32),
             jnp.asarray(float(spec.lr)), jnp.asarray(float(fused_lam)),
-            jnp.asarray(float(spec.rmsprop_beta)), jnp.asarray(float(spec.eps)),
         )
         Wf = np.asarray(Wf)
         avgs = np.asarray(avgs)

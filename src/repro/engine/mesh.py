@@ -101,6 +101,24 @@ def build_train_step(cfg, gcfg: G.GuidedConfig, opt: Optimizer, ctx: ShardCtx, l
     strategy = resolve_strategy(gcfg, strategy)
     c = n_workers or max(ctx.n_workers, 1)
 
+    # Whole-update fusion (DESIGN.md §11): when the strategy's compensation is
+    # the kernel's lam fold and the optimizer has a fused kernel, ONE fused
+    # dispatch per leaf (compensate → accumulator → apply) replaces
+    # compensate_grads + opt.update + tree_add. sim_kernel returns None for
+    # bespoke-compensation strategies (gap_aware); hypers must be known and
+    # weight_decay-free for the fused closure to match opt.update bit-for-bit.
+    # On interpret backends sim_kernel resolves to the pure-jnp reference
+    # (impl="auto"), so the cpu mesh never pays per-leaf emulated Pallas calls.
+    fused = None
+    fused_lam = 0.0
+    if opt.hypers is not None and opt.name in ("sgd", "momentum", "adam"):
+        hy = dict(opt.hypers)
+        if not hy.pop("weight_decay", 0.0):
+            fused = strategy.sim_kernel(opt.name, **hy)
+            fused_lam = float(strategy.sim_kernel_lambda())
+    if fused is not None:
+        from repro.kernels.guided_update.ops import tree_fused_update
+
     def loss_fn(p, batch, corr_w):
         per_ex, aux, _ = T.forward_train(p, batch, cfg, ctx)
         B = per_ex.shape[0]
@@ -149,12 +167,21 @@ def build_train_step(cfg, gcfg: G.GuidedConfig, opt: Optimizer, ctx: ShardCtx, l
 
         grad_at = gstate.w_stale if gcfg.needs_stale else params
         grads, E_i, mean_loss = grads_and_losses(grad_at, batch, corr_w)
-        grads = strategy.compensate_grads(grads, params, gstate)
 
         lr = lr_schedule(gstate.step)
-        updates, opt_state = opt.update(grads, gstate.opt_state, params,
-                                        lr * c if gcfg.mode != "seq" else lr)
-        params = tree_add(params, updates)
+        lr_eff = lr * c if gcfg.mode != "seq" else lr
+        if fused is not None:
+            # compensation rides inside the fused update as the lam fold
+            # (identity for non-dc strategies: lam == 0); w_stale only matters
+            # when lam != 0, which implies gcfg.needs_stale
+            w_ref = gstate.w_stale if gcfg.needs_stale else params
+            params, opt_state = tree_fused_update(
+                fused, opt.name, params, grads, w_ref, gstate.opt_state,
+                lr_eff, fused_lam)
+        else:
+            grads = strategy.compensate_grads(grads, params, gstate)
+            updates, opt_state = opt.update(grads, gstate.opt_state, params, lr_eff)
+            params = tree_add(params, updates)
         if strategy.needs_correction:
             # only correcting strategies trace the second weighted
             # forward+backward; for the rest (guided_fused folds its replay

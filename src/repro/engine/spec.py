@@ -33,6 +33,13 @@ if TYPE_CHECKING:  # GuidedConfig lives in the jax stack; import it lazily so
 BACKENDS = ("mesh", "sim", "scan", "dist")
 MODES = ("seq", "ssgd", "asgd")
 
+# every optimizer the repo implements (repro.optim.optimizers registry)
+OPTIMIZERS = ("sgd", "momentum", "rmsprop", "adagrad", "adam")
+# the numpy parameter-server reference (_Server._apply) and the dist chief's
+# numpy apply rule only implement these; mesh/scan run all of OPTIMIZERS
+# (momentum/adam via the fused whole-update kernels, DESIGN.md §11)
+SIM_OPTIMIZERS = ("sgd", "rmsprop", "adagrad")
+
 # dist-backend execution disciplines (repro.dist, DESIGN.md §10):
 #   replay — real worker processes, scheduled interleaving: the chief grants
 #            pulls/pushes against the extracted DelaySchedule, so the run is
@@ -170,6 +177,14 @@ class ExperimentSpec:
         if self.schedule not in SCHEDULES:
             raise ValueError(
                 f"unknown schedule {self.schedule!r}; known: {', '.join(SCHEDULES)}")
+        if self.optimizer not in OPTIMIZERS:
+            raise ValueError(
+                f"unknown optimizer {self.optimizer!r}; known: {', '.join(OPTIMIZERS)}")
+        if self.backend in ("sim", "dist") and self.optimizer not in SIM_OPTIMIZERS:
+            raise ValueError(
+                f"optimizer {self.optimizer!r} has no numpy server apply rule "
+                f"(backend={self.backend!r} supports {', '.join(SIM_OPTIMIZERS)}); "
+                f"use backend='mesh' or backend='scan' for momentum/adam")
         if self.ckpt_every < 0 or self.keep_last < 0:
             raise ValueError(
                 f"ckpt_every/keep_last must be >= 0 "

@@ -100,6 +100,30 @@ class DelayCompensator:
         kernel performs the compensation and compensate_grads is skipped."""
         return 0.0
 
+    def sim_kernel(self, optimizer: str, *, impl: str = "auto", **hypers):
+        """The fused whole-update callable (gradient → compensation →
+        accumulator → weight, one dispatch) for this strategy × `optimizer`,
+        or None when the hot loop must fall back to the two-phase path
+        (compensate_grads, then a plain lam=0 apply).
+
+        Fusion is sound exactly when this strategy's compensation is the
+        kernel's lam fold: either compensate_grads is not overridden (the
+        identity — guided/none strategies), or sim_kernel_lambda() is
+        non-zero (DC-ASGD family, whose Taylor term IS the fold). Strategies
+        with bespoke gradient math (gap_aware) get None regardless of the
+        optimizer; so do optimizers without a fused kernel (adagrad). The
+        fallback matrix is tabulated in DESIGN.md §11. `hypers` are the
+        optimizer's python-float hyperparameters, baked into the closure."""
+        overridden = (type(self).compensate_grads
+                      is not DelayCompensator.compensate_grads)
+        if overridden and not self.sim_kernel_lambda():
+            return None
+        from repro.kernels.guided_update.ops import FUSED_OPTIMIZERS, fused_update_for
+
+        if optimizer not in FUSED_OPTIMIZERS:
+            return None
+        return fused_update_for(optimizer, impl=impl, **hypers)
+
     def sim_score(self, d_own, d_avg, prev_avg_err):
         """Paper Fig. 7 consistency score of ONE arrival: the applied batch is
         consistent when the step moved both its own loss (d_own) and the

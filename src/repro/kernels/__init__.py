@@ -10,3 +10,21 @@ def default_interpret() -> bool:
     import jax
 
     return jax.default_backend() not in ("gpu", "tpu")
+
+
+def _flat_grid(block, *arrays):
+    """The one flatten/pad/grid recipe of the elementwise *_raw wrappers
+    (guided_update and its optimizer-fused family): clamp `block` to the
+    element count, flatten every array and zero-pad to a block multiple.
+
+    Returns `(flats, block, grid, n)` — the padded 1-D views (same order as
+    `arrays`), the clamped block, the 1-D grid size `padded_len // block`, and
+    the original element count for the caller's `out[:n].reshape(shape)`.
+    """
+    import jax.numpy as jnp
+
+    n = arrays[0].size
+    block = min(block, n)
+    pad = (-n) % block
+    flats = [jnp.pad(a.reshape(-1), (0, pad)) for a in arrays]
+    return flats, block, (n + pad) // block, n

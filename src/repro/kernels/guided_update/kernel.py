@@ -12,6 +12,22 @@ and one write of W' — strictly memory-bound, so fusing is a ~2x traffic win on
 the update phase (see EXPERIMENTS.md §Perf). The rmsprop variant additionally
 carries the r accumulator in the same pass (paper Fig. 11).
 
+The optimizer-fused family extends the same chain through the accumulator
+math, so momentum and adam also do gradient → compensate → accumulator →
+weight in one pass instead of round-tripping m/v through HBM as separate XLA
+ops:
+
+    guided_momentum_update_raw : m' = beta*m + g~ ; W' = W - lr*m'
+                                 (nesterov: W' = W - lr*(beta*m' + g~))
+    guided_adam_update_raw     : m' = b1*m + (1-b1)*g~ ; v' = b2*v + (1-b2)*g~^2
+                                 W' = W - lr * (m'/bc1) / (sqrt(v'/bc2) + eps)
+
+The accumulator recurrences mirror `repro.optim.optimizers` bit-for-bit at the
+compute dtype (the (1-b) factors are pre-rounded from the python hypers exactly
+as weak-typed promotion does in the reference; adam's bias corrections bc1/bc2
+are computed OUTSIDE the kernel from the step counter with the reference's
+exact expression and enter as scalars).
+
 This is also the apply path of the scan delay-simulation backend
 (repro.engine.delaysim): `interpret` autodetects from jax.default_backend()
 (compiled on gpu/tpu, interpret on cpu), and the compute dtype follows the
@@ -19,19 +35,49 @@ weights (promote_types(w.dtype, float32)), so the float64 parity runs of the
 scan backend reproduce the numpy reference loop exactly while bf16/f32 mesh
 weights keep the f32 arithmetic the TPU path compiles to.
 
-Tiling: flat 1-D blocks of 64k elements (512 KiB fp32) per grid step.
+Tiling: flat 1-D blocks via `repro.kernels._flat_grid`. `block=None` (the
+default) resolves through `repro.kernels.autotune.tuned_block` — a per
+(kernel, dtype, backend+device) measured winner, falling back to 64k elements
+(512 KiB fp32) where sweeping is meaningless. Resolution happens at trace
+time, so the tuned block is a static of the enclosing jit.
 """
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels import default_interpret  # noqa: F401  (re-export: ops.py, delaysim)
+from repro.kernels import _flat_grid, default_interpret  # noqa: F401  (re-export: ops.py, delaysim)
+from repro.kernels.autotune import tuned_block
 
 
 def _compute_dtype(dtype):
     return jnp.promote_types(dtype, jnp.float32)
+
+
+def _resolve(block, interpret, kernel_name, dtype):
+    if interpret is None:
+        interpret = default_interpret()
+    if block is None:
+        block = tuned_block(kernel_name, dtype)
+    return block, interpret
+
+
+def _launch(kernel_fn, flats, scalars, block, grid, out_dtypes, interpret):
+    """One flat elementwise pallas_call: every array in/out tiled `(block,)`,
+    the scalar pack riding along whole in ANY memory space."""
+    m = flats[0].shape[0]
+    bspec = lambda: pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel_fn,
+        grid=(grid,),
+        in_specs=[bspec() for _ in flats] + [pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=[bspec() for _ in out_dtypes],
+        out_shape=[jax.ShapeDtypeStruct((m,), d) for d in out_dtypes],
+        interpret=interpret,
+    )(*flats, scalars)
 
 
 def _sgd_kernel(w_ref, g_ref, ws_ref, scal_ref, out_ref):
@@ -43,6 +89,26 @@ def _sgd_kernel(w_ref, g_ref, ws_ref, scal_ref, out_ref):
     ws = ws_ref[...].astype(ct)
     gt = g + lam * g * g * (w - ws)
     out_ref[...] = (w - lr * gt).astype(out_ref.dtype)
+
+
+def _momentum_kernel(nesterov, w_ref, g_ref, ws_ref, m_ref, scal_ref, out_ref,
+                     m_out_ref):
+    ct = _compute_dtype(w_ref.dtype)
+    lr = scal_ref[0]
+    lam = scal_ref[1]
+    beta = scal_ref[2]
+    w = w_ref[...].astype(ct)
+    g = g_ref[...].astype(ct)
+    ws = ws_ref[...].astype(ct)
+    m = m_ref[...].astype(ct)
+    gt = g + lam * g * g * (w - ws)
+    m_new = beta * m + gt
+    if nesterov:
+        upd = -(lr * (beta * m_new + gt))
+    else:
+        upd = -lr * m_new
+    out_ref[...] = (w + upd).astype(out_ref.dtype)
+    m_out_ref[...] = m_new
 
 
 def _rmsprop_kernel(w_ref, g_ref, ws_ref, r_ref, scal_ref, out_ref, r_out_ref):
@@ -61,64 +127,96 @@ def _rmsprop_kernel(w_ref, g_ref, ws_ref, r_ref, scal_ref, out_ref, r_out_ref):
     r_out_ref[...] = r_new
 
 
-def guided_sgd_update_raw(w, g, w_stale, lr, lam, *, block: int = 65536,
+def _adam_kernel(w_ref, g_ref, ws_ref, m_ref, v_ref, scal_ref, out_ref,
+                 m_out_ref, v_out_ref):
+    ct = _compute_dtype(w_ref.dtype)
+    lr = scal_ref[0]
+    lam = scal_ref[1]
+    b1 = scal_ref[2]
+    omb1 = scal_ref[3]
+    b2 = scal_ref[4]
+    omb2 = scal_ref[5]
+    bc1 = scal_ref[6]
+    bc2 = scal_ref[7]
+    eps = scal_ref[8]
+    w = w_ref[...].astype(ct)
+    g = g_ref[...].astype(ct)
+    ws = ws_ref[...].astype(ct)
+    m = m_ref[...].astype(ct)
+    v = v_ref[...].astype(ct)
+    gt = g + lam * g * g * (w - ws)
+    m_new = b1 * m + omb1 * gt
+    v_new = b2 * v + omb2 * (gt * gt)
+    step = m_new / bc1 / (jnp.sqrt(v_new / bc2) + eps)
+    out_ref[...] = (w - lr * step).astype(out_ref.dtype)
+    m_out_ref[...] = m_new
+    v_out_ref[...] = v_new
+
+
+def guided_sgd_update_raw(w, g, w_stale, lr, lam, *, block: int = None,
                           interpret: bool = None):
     """Flat fused update for one parameter leaf. Returns new w."""
-    if interpret is None:
-        interpret = default_interpret()
+    block, interpret = _resolve(block, interpret, "guided_sgd_update", w.dtype)
     ct = _compute_dtype(w.dtype)
     scalars = jnp.stack([jnp.asarray(lr, ct), jnp.asarray(lam, ct)])
-    n = w.size
-    block = min(block, n)
-    pad = (-n) % block
-    wf = jnp.pad(w.reshape(-1), (0, pad))
-    gf = jnp.pad(g.reshape(-1), (0, pad))
-    wsf = jnp.pad(w_stale.reshape(-1), (0, pad))
-    m = n + pad
-    (out,) = pl.pallas_call(
-        _sgd_kernel,
-        grid=(m // block,),
-        in_specs=[
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
-        out_specs=[pl.BlockSpec((block,), lambda i: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((m,), w.dtype)],
-        interpret=interpret,
-    )(wf, gf, wsf, scalars)
+    flats, block, grid, n = _flat_grid(block, w, g, w_stale)
+    (out,) = _launch(_sgd_kernel, flats, scalars, block, grid,
+                     [w.dtype], interpret)
     return out[:n].reshape(w.shape)
 
 
-def guided_rmsprop_update_raw(w, g, w_stale, r, lr, lam, beta, eps, *, block: int = 65536,
-                              interpret: bool = None):
-    if interpret is None:
-        interpret = default_interpret()
+def guided_momentum_update_raw(w, g, w_stale, m, lr, lam, beta, *,
+                               nesterov: bool = False, block: int = None,
+                               interpret: bool = None):
+    """Fused compensate + momentum accumulate + apply. Returns (new w, new m)."""
+    block, interpret = _resolve(block, interpret, "guided_momentum_update",
+                                w.dtype)
+    ct = _compute_dtype(w.dtype)
+    scalars = jnp.stack([
+        jnp.asarray(lr, ct), jnp.asarray(lam, ct), jnp.asarray(beta, ct),
+    ])
+    flats, block, grid, n = _flat_grid(block, w, g, w_stale, m)
+    out, m_new = _launch(partial(_momentum_kernel, nesterov), flats, scalars,
+                         block, grid, [w.dtype, ct], interpret)
+    return out[:n].reshape(w.shape), m_new[:n].reshape(w.shape)
+
+
+def guided_rmsprop_update_raw(w, g, w_stale, r, lr, lam, beta, eps, *,
+                              block: int = None, interpret: bool = None):
+    block, interpret = _resolve(block, interpret, "guided_rmsprop_update",
+                                w.dtype)
     ct = _compute_dtype(w.dtype)
     scalars = jnp.stack([
         jnp.asarray(lr, ct), jnp.asarray(lam, ct),
         jnp.asarray(beta, ct), jnp.asarray(eps, ct),
     ])
-    n = w.size
-    block = min(block, n)
-    pad = (-n) % block
-    pad_ = lambda a: jnp.pad(a.reshape(-1), (0, pad))
-    m = n + pad
-    out, r_new = pl.pallas_call(
-        _rmsprop_kernel,
-        grid=(m // block,),
-        in_specs=[
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec((block,), lambda i: (i,)),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
-        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
-                   pl.BlockSpec((block,), lambda i: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((m,), w.dtype),
-                   jax.ShapeDtypeStruct((m,), ct)],
-        interpret=interpret,
-    )(pad_(w), pad_(g), pad_(w_stale), pad_(r), scalars)
+    flats, block, grid, n = _flat_grid(block, w, g, w_stale, r)
+    out, r_new = _launch(_rmsprop_kernel, flats, scalars, block, grid,
+                         [w.dtype, ct], interpret)
     return out[:n].reshape(w.shape), r_new[:n].reshape(w.shape)
+
+
+def guided_adam_update_raw(w, g, w_stale, m, v, t, lr, lam, b1, b2, eps, *,
+                           block: int = None, interpret: bool = None):
+    """Fused compensate + adam moments + bias-corrected apply.
+
+    `t` is the ALREADY-incremented step (the reference does `t = state+1`
+    before the moment updates); `b1`/`b2` must be python floats so the
+    pre-rounded (1-b) factors match the reference's weak-typed promotion.
+    Returns (new w, new m, new v).
+    """
+    block, interpret = _resolve(block, interpret, "guided_adam_update", w.dtype)
+    ct = _compute_dtype(w.dtype)
+    tct = jnp.asarray(t).astype(ct)
+    scalars = jnp.stack([
+        jnp.asarray(lr, ct), jnp.asarray(lam, ct),
+        jnp.asarray(b1, ct), jnp.asarray(1.0 - b1, ct),
+        jnp.asarray(b2, ct), jnp.asarray(1.0 - b2, ct),
+        1.0 - jnp.asarray(b1, ct) ** tct, 1.0 - jnp.asarray(b2, ct) ** tct,
+        jnp.asarray(eps, ct),
+    ])
+    flats, block, grid, n = _flat_grid(block, w, g, w_stale, m, v)
+    out, m_new, v_new = _launch(_adam_kernel, flats, scalars, block, grid,
+                                [w.dtype, ct, ct], interpret)
+    return (out[:n].reshape(w.shape), m_new[:n].reshape(w.shape),
+            v_new[:n].reshape(w.shape))

@@ -1,4 +1,21 @@
-"""jit'd tree-level wrapper for the fused guided update kernel."""
+"""jit'd tree-level wrappers + the fused whole-update dispatch.
+
+`fused_update_for(name)` is the seam the engine hot loops (mesh train step,
+delaysim scan body) use to select ONE whole-update implementation per
+optimizer: gradient → guided/DC compensation → accumulator recurrence →
+weight apply, as a single dispatch. Hypers are baked as python floats at
+selection time (trace statics), so the closure matches what
+`repro.optim.optimizers` closures would compute bit-for-bit.
+
+impl policy:
+  * "kernel" — always the Pallas `*_raw` kernel (the scan backend: one tiny
+    matrix, interpret on cpu is ~35us/step and preserves the committed f64
+    parity trajectories);
+  * "ref"    — always the pure-jnp reference;
+  * "auto"   — kernel on kernel-capable backends (gpu/tpu), reference on
+    interpret backends (the mesh trainer: per-leaf emulated Pallas calls on
+    cpu would be ~70x overhead, while XLA fuses the jnp chain anyway).
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -6,15 +23,23 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.guided_update import ref as R
 from repro.kernels.guided_update.kernel import (
     default_interpret,
+    guided_adam_update_raw,
+    guided_momentum_update_raw,
     guided_rmsprop_update_raw,
     guided_sgd_update_raw,
 )
 
+#: optimizers with a whole-update fused implementation (adagrad deliberately
+#: not: the scan backend keeps its 3-op inline XLA form, and the mesh falls
+#: back to the two-phase opt.update path)
+FUSED_OPTIMIZERS = ("sgd", "momentum", "rmsprop", "adam")
+
 
 @partial(jax.jit, static_argnames=("block",))
-def guided_sgd_update(params, grads, w_stale, lr, lam=0.0, *, block: int = 65536):
+def guided_sgd_update(params, grads, w_stale, lr, lam=0.0, *, block: int = None):
     """Tree-level fused update: one kernel launch per leaf."""
     return jax.tree.map(
         lambda w, g, ws: guided_sgd_update_raw(w, g, ws, lr, lam, block=block,
@@ -23,14 +48,156 @@ def guided_sgd_update(params, grads, w_stale, lr, lam=0.0, *, block: int = 65536
     )
 
 
+def _unzip(out, i):
+    return jax.tree.map(lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
+
+
+@partial(jax.jit, static_argnames=("block", "beta", "nesterov"))
+def guided_momentum_update(params, grads, w_stale, m, lr, lam=0.0, *,
+                           beta: float = 0.9, nesterov: bool = False,
+                           block: int = None):
+    out = jax.tree.map(
+        lambda w, g, ws, mi: guided_momentum_update_raw(
+            w, g, ws, mi, lr, lam, beta, nesterov=nesterov, block=block,
+            interpret=default_interpret()),
+        params, grads, w_stale, m,
+    )
+    return _unzip(out, 0), _unzip(out, 1)
+
+
 @partial(jax.jit, static_argnames=("block",))
 def guided_rmsprop_update(params, grads, w_stale, r, lr, lam=0.0, beta=0.9,
-                          eps=1e-8, *, block: int = 65536):
+                          eps=1e-8, *, block: int = None):
     out = jax.tree.map(
         lambda w, g, ws, ri: guided_rmsprop_update_raw(
             w, g, ws, ri, lr, lam, beta, eps, block=block, interpret=default_interpret()),
         params, grads, w_stale, r,
     )
-    new_w = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
-    new_r = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
-    return new_w, new_r
+    return _unzip(out, 0), _unzip(out, 1)
+
+
+@partial(jax.jit, static_argnames=("block", "b1", "b2", "eps"))
+def guided_adam_update(params, grads, w_stale, m, v, t, lr, lam=0.0, *,
+                       b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                       block: int = None):
+    """`t` is the already-incremented step (see guided_adam_update_raw)."""
+    out = jax.tree.map(
+        lambda w, g, ws, mi, vi: guided_adam_update_raw(
+            w, g, ws, mi, vi, t, lr, lam, b1, b2, eps, block=block,
+            interpret=default_interpret()),
+        params, grads, w_stale, m, v,
+    )
+    return _unzip(out, 0), _unzip(out, 1), _unzip(out, 2)
+
+
+def fused_update_for(name: str, *, beta: float = 0.9, nesterov: bool = False,
+                     b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                     impl: str = "auto"):
+    """One whole-update callable for optimizer `name`, uniform signature:
+
+        f(w, g, w_stale, acc, t, lr, lam, *, block=None, interpret=None)
+            -> (new_w, new_acc)
+
+    `acc` is the per-leaf accumulator tuple — () for sgd, (m,) for momentum,
+    (r,) for rmsprop, (m, v) for adam — and `t` the already-incremented adam
+    step (ignored by the others). Hypers must be python floats/bools (they are
+    baked into the closure exactly as the `repro.optim.optimizers` closures
+    bake them). Raises KeyError for optimizers with no fused form (adagrad).
+    """
+    if name not in FUSED_OPTIMIZERS:
+        raise KeyError(
+            f"no fused whole-update for optimizer {name!r}; "
+            f"fused: {', '.join(FUSED_OPTIMIZERS)}")
+    if impl not in ("auto", "kernel", "ref"):
+        raise ValueError(f"impl must be auto|kernel|ref, got {impl!r}")
+    use_kernel = impl == "kernel" or (impl == "auto" and not default_interpret())
+
+    if name == "sgd":
+        if use_kernel:
+            def f(w, g, ws, acc, t, lr, lam, *, block=None, interpret=None):
+                return (guided_sgd_update_raw(w, g, ws, lr, lam, block=block,
+                                              interpret=interpret), acc)
+        else:
+            def f(w, g, ws, acc, t, lr, lam, *, block=None, interpret=None):
+                return R.guided_sgd_update_ref(w, g, ws, lr, lam), acc
+    elif name == "momentum":
+        if use_kernel:
+            def f(w, g, ws, acc, t, lr, lam, *, block=None, interpret=None):
+                w2, m2 = guided_momentum_update_raw(
+                    w, g, ws, acc[0], lr, lam, beta, nesterov=nesterov,
+                    block=block, interpret=interpret)
+                return w2, (m2,)
+        else:
+            def f(w, g, ws, acc, t, lr, lam, *, block=None, interpret=None):
+                w2, m2 = R.guided_momentum_update_ref(
+                    w, g, ws, acc[0], lr, lam, beta, nesterov=nesterov)
+                return w2, (m2,)
+    elif name == "rmsprop":
+        if use_kernel:
+            def f(w, g, ws, acc, t, lr, lam, *, block=None, interpret=None):
+                w2, r2 = guided_rmsprop_update_raw(
+                    w, g, ws, acc[0], lr, lam, beta, eps, block=block,
+                    interpret=interpret)
+                return w2, (r2,)
+        else:
+            def f(w, g, ws, acc, t, lr, lam, *, block=None, interpret=None):
+                w2, r2 = R.guided_rmsprop_update_ref(
+                    w, g, ws, acc[0], lr, lam, beta, eps)
+                return w2, (r2,)
+    else:  # adam
+        if use_kernel:
+            def f(w, g, ws, acc, t, lr, lam, *, block=None, interpret=None):
+                w2, m2, v2 = guided_adam_update_raw(
+                    w, g, ws, acc[0], acc[1], t, lr, lam, b1, b2, eps,
+                    block=block, interpret=interpret)
+                return w2, (m2, v2)
+        else:
+            def f(w, g, ws, acc, t, lr, lam, *, block=None, interpret=None):
+                w2, m2, v2 = R.guided_adam_update_ref(
+                    w, g, ws, acc[0], acc[1], t, lr, lam, b1, b2, eps)
+                return w2, (m2, v2)
+
+    f.optimizer = name
+    f.impl = "kernel" if use_kernel else "ref"
+    return f
+
+
+#: accumulator tuple arity per fused optimizer (what `acc` carries)
+FUSED_ACC_ARITY = {"sgd": 0, "momentum": 1, "rmsprop": 1, "adam": 2}
+
+
+def tree_fused_update(fused, name: str, params, grads, w_stale, opt_state,
+                      lr, lam):
+    """Apply a `fused_update_for` callable across a parameter pytree, mapping
+    the optimizer's `repro.optim.optimizers` state layout to the per-leaf acc
+    tuples and back. Returns (new_params, new_opt_state). Traced inside the
+    caller's jit (the mesh train step)."""
+    if name == "sgd":
+        new_p = jax.tree.map(
+            lambda w, g, ws: fused(w, g, ws, (), None, lr, lam)[0],
+            params, grads, w_stale)
+        return new_p, opt_state
+    if name == "momentum":
+        out = jax.tree.map(
+            lambda w, g, ws, m: fused(w, g, ws, (m,), None, lr, lam),
+            params, grads, w_stale, opt_state["m"])
+        return _unzip(out, 0), {"m": jax.tree.map(
+            lambda t: t[1][0], out, is_leaf=lambda x: isinstance(x, tuple))}
+    if name == "rmsprop":
+        out = jax.tree.map(
+            lambda w, g, ws, r: fused(w, g, ws, (r,), None, lr, lam),
+            params, grads, w_stale, opt_state["r"])
+        return _unzip(out, 0), {"r": jax.tree.map(
+            lambda t: t[1][0], out, is_leaf=lambda x: isinstance(x, tuple))}
+    if name == "adam":
+        t = opt_state["t"] + 1
+        out = jax.tree.map(
+            lambda w, g, ws, m, v: fused(w, g, ws, (m, v), t, lr, lam),
+            params, grads, w_stale, opt_state["m"], opt_state["v"])
+        tup = lambda x: isinstance(x, tuple)
+        return _unzip(out, 0), {
+            "m": jax.tree.map(lambda o: o[1][0], out, is_leaf=tup),
+            "v": jax.tree.map(lambda o: o[1][1], out, is_leaf=tup),
+            "t": t,
+        }
+    raise KeyError(name)

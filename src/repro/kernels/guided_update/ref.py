@@ -1,17 +1,59 @@
-"""Pure-jnp oracle for the fused guided update."""
+"""Pure-jnp oracle for the fused guided update family.
+
+Each reference computes at the kernel's compute dtype (promote_types(w.dtype,
+float32) — f32 for f32/bf16 weights, f64 for the scan backend's parity runs)
+and mirrors `repro.optim.optimizers` update math bit-for-bit when lam == 0:
+same op order, same weak-typed python-float hypers, accumulators returned at
+the compute dtype. These double as the mesh trainer's fused-apply path on
+interpret backends, where launching per-leaf emulated Pallas kernels would be
+pure overhead (XLA fuses these chains into one loop anyway on CPU).
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
+def _ct(w):
+    return jnp.promote_types(w.dtype, jnp.float32)
+
+
 def guided_sgd_update_ref(w, g, w_stale, lr, lam):
-    w32, g32, ws32 = (a.astype(jnp.float32) for a in (w, g, w_stale))
-    gt = g32 + lam * g32 * g32 * (w32 - ws32)
-    return (w32 - lr * gt).astype(w.dtype)
+    ct = _ct(w)
+    wc, gc, wsc = (a.astype(ct) for a in (w, g, w_stale))
+    gt = gc + lam * gc * gc * (wc - wsc)
+    return (wc - lr * gt).astype(w.dtype)
+
+
+def guided_momentum_update_ref(w, g, w_stale, m, lr, lam, beta, *,
+                               nesterov: bool = False):
+    ct = _ct(w)
+    wc, gc, wsc, mc = (a.astype(ct) for a in (w, g, w_stale, m))
+    gt = gc + lam * gc * gc * (wc - wsc)
+    m_new = beta * mc + gt
+    if nesterov:
+        upd = -(lr * (beta * m_new + gt))
+    else:
+        upd = -lr * m_new
+    return (wc + upd).astype(w.dtype), m_new
 
 
 def guided_rmsprop_update_ref(w, g, w_stale, r, lr, lam, beta, eps):
-    w32, g32, ws32, r32 = (a.astype(jnp.float32) for a in (w, g, w_stale, r))
-    gt = g32 + lam * g32 * g32 * (w32 - ws32)
-    r_new = beta * r32 + (1 - beta) * gt * gt
-    return (w32 - lr * gt / jnp.sqrt(r_new + eps)).astype(w.dtype), r_new
+    ct = _ct(w)
+    wc, gc, wsc, rc = (a.astype(ct) for a in (w, g, w_stale, r))
+    gt = gc + lam * gc * gc * (wc - wsc)
+    r_new = beta * rc + (1 - beta) * gt * gt
+    return (wc - lr * gt / jnp.sqrt(r_new + eps)).astype(w.dtype), r_new
+
+
+def guided_adam_update_ref(w, g, w_stale, m, v, t, lr, lam, b1, b2, eps):
+    """`t` is the already-incremented step, like the raw kernel."""
+    ct = _ct(w)
+    wc, gc, wsc, mc, vc = (a.astype(ct) for a in (w, g, w_stale, m, v))
+    gt = gc + lam * gc * gc * (wc - wsc)
+    m_new = b1 * mc + (1 - b1) * gt
+    v_new = b2 * vc + (1 - b2) * jnp.square(gt)
+    tct = jnp.asarray(t).astype(ct)
+    bc1 = 1 - b1 ** tct
+    bc2 = 1 - b2 ** tct
+    step = m_new / bc1 / (jnp.sqrt(v_new / bc2) + eps)
+    return (wc - lr * step).astype(w.dtype), m_new, v_new

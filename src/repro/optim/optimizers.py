@@ -21,6 +21,10 @@ class Optimizer(NamedTuple):
     init: Callable
     update: Callable  # (grads, state, params, lr) -> (updates, state)
     name: str = ""
+    # the factory's hyperparameters, exposed so the fused whole-update kernels
+    # (repro.kernels.guided_update.ops.fused_update_for) can bake the SAME
+    # values the closures use; None means "unknown" and disables fusion
+    hypers: dict = None
 
 
 def _zeros(params):
@@ -34,7 +38,7 @@ def sgd() -> Optimizer:
     def update(grads, state, params, lr):
         return jax.tree.map(lambda g: (-lr * g.astype(jnp.float32)).astype(g.dtype), grads), state
 
-    return Optimizer(init, update, "sgd")
+    return Optimizer(init, update, "sgd", {})
 
 
 def momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
@@ -49,7 +53,7 @@ def momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
             upd = jax.tree.map(lambda mi: -lr * mi, m)
         return upd, {"m": m}
 
-    return Optimizer(init, update, "momentum")
+    return Optimizer(init, update, "momentum", {"beta": beta, "nesterov": nesterov})
 
 
 def rmsprop(beta: float = 0.9, eps: float = 1e-8) -> Optimizer:
@@ -65,7 +69,7 @@ def rmsprop(beta: float = 0.9, eps: float = 1e-8) -> Optimizer:
         upd = jax.tree.map(lambda g, ri: -lr * g.astype(jnp.float32) / jnp.sqrt(ri + eps), grads, r)
         return upd, {"r": r}
 
-    return Optimizer(init, update, "rmsprop")
+    return Optimizer(init, update, "rmsprop", {"beta": beta, "eps": eps})
 
 
 def adagrad(eps: float = 1e-8) -> Optimizer:
@@ -77,7 +81,7 @@ def adagrad(eps: float = 1e-8) -> Optimizer:
         upd = jax.tree.map(lambda g, ri: -lr * g.astype(jnp.float32) / jnp.sqrt(ri + eps), grads, r)
         return upd, {"r": r}
 
-    return Optimizer(init, update, "adagrad")
+    return Optimizer(init, update, "adagrad", {"eps": eps})
 
 
 def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
@@ -99,7 +103,7 @@ def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: fl
 
         return jax.tree.map(upd, m, v, params), {"m": m, "v": v, "t": t}
 
-    return Optimizer(init, update, "adam")
+    return Optimizer(init, update, "adam", {"b1": b1, "b2": b2, "eps": eps, "weight_decay": weight_decay})
 
 
 _REGISTRY = {

@@ -302,3 +302,33 @@ def test_runner_cache_is_a_bounded_lru(thyroid, monkeypatch):
     rep = Trainer.from_spec(spec).fit((Xtr, ytr, k, Xte, yte))
     assert np.isfinite(rep.final_loss)
     assert len(delaysim._RUNNERS) == 1
+
+
+# ----------------------------------------- fused optimizers on the scan path
+
+
+@pytest.mark.parametrize("optimizer", ["momentum", "adam"])
+@pytest.mark.parametrize("strategy", ["guided_fused", "dc_asgd"])
+def test_scan_fused_optimizers_train(thyroid, optimizer, strategy):
+    """The scan backend routes momentum/adam through the fused whole-update
+    kernels (strategy.sim_kernel, DESIGN.md §11); both compensating and
+    plain-guided strategies must train to finite losses and beat init."""
+    Xtr, ytr, k, Xte, yte = thyroid
+    spec = ExperimentSpec(backend="scan", mode="asgd", strategy=strategy,
+                          epochs=2, seed=0, rho=4, lr=0.01,
+                          optimizer=optimizer)
+    rep = Trainer.from_spec(spec).fit((Xtr, ytr, k, Xte, yte))
+    assert np.isfinite(rep.final_loss)
+    losses = [h[1] for h in rep.history]
+    assert losses[-1] < losses[0]
+
+
+def test_sim_and_dist_backends_reject_fused_only_optimizers():
+    """The numpy event loop and the socket PS only implement
+    sgd/rmsprop/adagrad; momentum/adam must fail at spec construction, not
+    deep inside a worker process."""
+    for backend in ("sim", "dist"):
+        for optimizer in ("momentum", "adam"):
+            with pytest.raises(ValueError, match="backend"):
+                ExperimentSpec(backend=backend, mode="asgd", strategy="none",
+                               epochs=1, seed=0, optimizer=optimizer)

@@ -283,3 +283,51 @@ def test_mesh_global_batch_divisibility_is_a_real_exception():
                           steps=1, seq_len=8, global_batch=7, workers=2)
     with pytest.raises(ValueError, match=r"global_batch=7.*c=2"):
         Trainer.from_spec(spec).fit()
+
+
+# ------------------------------------- fused whole-update on the mesh path
+
+
+@pytest.mark.parametrize("optname,strategy,mode", [
+    ("momentum", "guided_fused", "ssgd"),
+    ("adam", "dc_asgd", "asgd"),
+    ("sgd", "dc_asgd_guided", "asgd"),
+])
+def test_mesh_fused_update_matches_two_phase(optname, strategy, mode):
+    """The fused whole-update dispatch (DESIGN.md §11) must reproduce the
+    two-phase compensate_grads + opt.update + tree_add path step for step.
+    Forcing hypers=None disables fused selection, giving the control arm."""
+    from repro.data import make_batch_for
+    from repro.engine import mesh as M
+    from repro.optim import constant, get_optimizer
+
+    spec = ExperimentSpec(
+        backend="mesh", arch="yi_9b", reduced=True, mode=mode, strategy=strategy,
+        rho=2, lr=1e-2, seed=3, steps=4, seq_len=16, global_batch=4, workers=2,
+        optimizer=optname, schedule="constant",
+    )
+    cfg = spec.model_config()
+    gcfg = spec.to_guided_config()
+    batches = [
+        {k: jnp.asarray(v) for k, v in make_batch_for(cfg, 16, 4, seed=i).items()}
+        for i in range(4)
+    ]
+
+    def losses(opt):
+        params, _, gstate = M.init_train_state(
+            jax.random.PRNGKey(3), cfg, gcfg, opt, n_workers=2,
+            strategy=strategy)
+        step = jax.jit(M.build_train_step(
+            cfg, gcfg, opt, M.build_ctx("local"), constant(1e-2),
+            n_workers=2, strategy=strategy))
+        out = []
+        for b in batches:
+            params, gstate, m = step(params, gstate, b)
+            out.append(float(m["loss"]))
+        return out
+
+    opt = get_optimizer(optname)
+    assert opt.hypers is not None  # fused arm actually selectable
+    fused = losses(opt)
+    two_phase = losses(opt._replace(hypers=None))  # forces the legacy path
+    np.testing.assert_allclose(fused, two_phase, rtol=1e-6, atol=2e-6)

@@ -135,3 +135,172 @@ def test_guided_update_lam_zero_is_sgd():
     w, g, ws = randn(333), randn(333), randn(333)
     out = guided_sgd_update(w, g, ws, 0.1, 0.0, block=128)
     np.testing.assert_allclose(np.asarray(out), np.asarray(w - 0.1 * g), atol=1e-6)
+
+
+# ------------------------------------------- fused whole-update (DESIGN.md §11)
+
+
+def _optim_composition(optimizer, w, g, ws, state, lr, lam, **hy):
+    """The unfused two-phase path the fused kernels replace: DC-ASGD
+    compensation materialized, then the `repro.optim` accumulator update."""
+    from repro.optim import get_optimizer
+
+    gt = g + lam * g * g * (w - ws)
+    opt = get_optimizer(optimizer, **hy)
+    upd, state = opt.update(gt, state, w, lr)
+    return w + upd, state
+
+
+@pytest.mark.parametrize("n,block", [(37 * 129, 512), (4096, 4096)])
+@pytest.mark.parametrize("impl", ["kernel", "ref"])
+@pytest.mark.parametrize("nesterov", [False, True])
+def test_fused_momentum_matches_optimizer_composition(n, block, impl, nesterov):
+    from repro.kernels.guided_update.ops import fused_update_for
+
+    w = randn(n)
+    g = randn(n) * 0.01
+    ws = w + 0.05
+    m = jnp.abs(randn(n)) * 0.1
+    lr, lam = 0.2, 0.04
+    fused = fused_update_for("momentum", beta=0.9, nesterov=nesterov, impl=impl)
+    w_f, (m_f,) = fused(w, g, ws, (m,), 1, lr, lam, block=block)
+    w_r, st = _optim_composition("momentum", w, g, ws, {"m": m}, lr, lam,
+                                 beta=0.9, nesterov=nesterov)
+    np.testing.assert_allclose(np.asarray(w_f), np.asarray(w_r), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m_f), np.asarray(st["m"]), atol=1e-6)
+
+
+@pytest.mark.parametrize("n,block", [(37 * 129, 512), (4096, 4096)])
+@pytest.mark.parametrize("impl", ["kernel", "ref"])
+@pytest.mark.parametrize("t", [1, 7])
+def test_fused_adam_matches_optimizer_composition(n, block, impl, t):
+    from repro.kernels.guided_update.ops import fused_update_for
+
+    w = randn(n)
+    g = randn(n) * 0.01
+    ws = w + 0.05
+    m = jnp.abs(randn(n)) * 0.1
+    v = jnp.abs(randn(n)) * 0.05
+    lr, lam = 0.2, 0.04
+    fused = fused_update_for("adam", b1=0.9, b2=0.999, eps=1e-8, impl=impl)
+    w_f, (m_f, v_f) = fused(w, g, ws, (m, v), t, lr, lam, block=block)
+    state = {"m": m, "v": v, "t": jnp.asarray(t - 1, jnp.int32)}
+    w_r, st = _optim_composition("adam", w, g, ws, state, lr, lam,
+                                 b1=0.9, b2=0.999, eps=1e-8)
+    np.testing.assert_allclose(np.asarray(w_f), np.asarray(w_r), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m_f), np.asarray(st["m"]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v_f), np.asarray(st["v"]), atol=1e-6)
+
+
+def test_fused_kernels_match_ref_float64():
+    """The f64 regime (delay-sim parity): Pallas kernel vs the pure-jnp ref
+    at the scan backend's acceptance bar, odd size exercising the pad path."""
+    from jax.experimental import enable_x64
+
+    from repro.kernels.guided_update import kernel as K
+    from repro.kernels.guided_update import ref as R
+
+    with enable_x64():
+        rng = np.random.default_rng(7)
+        n = 37 * 129
+        w = jnp.asarray(rng.standard_normal(n), jnp.float64)
+        g = w * 0.01
+        ws = w + 0.05
+        m = jnp.abs(w) * 0.1
+        v = jnp.abs(w) * 0.05
+
+        w_k, m_k = K.guided_momentum_update_raw(w, g, ws, m, 0.2, 0.04, 0.9,
+                                                block=512)
+        w_r, m_r = R.guided_momentum_update_ref(w, g, ws, m, 0.2, 0.04, 0.9)
+        np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_r), atol=1e-12)
+        np.testing.assert_allclose(np.asarray(m_k), np.asarray(m_r), atol=1e-12)
+
+        out_k = K.guided_adam_update_raw(w, g, ws, m, v, 5, 0.2, 0.04,
+                                         0.9, 0.999, 1e-8, block=512)
+        out_r = R.guided_adam_update_ref(w, g, ws, m, v, 5, 0.2, 0.04,
+                                         0.9, 0.999, 1e-8)
+        for a, b in zip(out_k, out_r):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-12)
+        assert all(o.dtype == jnp.float64 for o in out_k)
+
+
+def test_fused_update_for_rejects_unfused_optimizer():
+    from repro.kernels.guided_update.ops import FUSED_OPTIMIZERS, fused_update_for
+
+    assert "adagrad" not in FUSED_OPTIMIZERS
+    with pytest.raises(KeyError):
+        fused_update_for("adagrad")
+
+
+# ------------------------------------------------------------------- autotune
+
+
+def test_autotune_cache_roundtrip(tmp_path):
+    """Sweep once (injected deterministic probe), persist, then re-resolve
+    from the JSON with NO probe — simulating a fresh process on the same box."""
+    from repro.kernels import autotune
+
+    calls = []
+
+    def fake_measure(kernel, dtype, block):
+        calls.append(block)
+        return abs(block - 32768) + 1.0  # 32k is fastest by construction
+
+    autotune.clear_memo()
+    got = autotune.tuned_block("guided_adam_update", jnp.float32,
+                               dirname=str(tmp_path), measure=fake_measure)
+    assert got == 32768
+    assert sorted(calls) == sorted(autotune.CANDIDATES)
+
+    path = autotune.cache_path(str(tmp_path))
+    import json
+    with open(path) as f:
+        data = json.load(f)
+    assert data["guided_adam_update.float32"] == 32768
+
+    autotune.clear_memo()  # fresh "process": memo gone, JSON remains
+    calls.clear()
+    again = autotune.tuned_block("guided_adam_update", jnp.float32,
+                                 dirname=str(tmp_path))
+    assert again == 32768
+    assert calls == []  # served from the persisted winners, no re-sweep
+
+    # and the memo now short-circuits the file read entirely
+    assert autotune.tuned_block("guided_adam_update", jnp.float32,
+                                dirname=str(tmp_path)) == 32768
+
+
+def test_autotune_interpret_returns_default_unswept(tmp_path, monkeypatch):
+    """On interpret backends (cpu) the sweep is skipped and nothing persists:
+    timing the emulator would tune the wrong thing."""
+    import os
+
+    from repro.kernels import autotune
+
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    autotune.clear_memo()
+    got = autotune.tuned_block("guided_sgd_update", jnp.float32,
+                               dirname=str(tmp_path))
+    assert got == autotune.DEFAULT_BLOCK
+    assert not os.path.exists(autotune.cache_path(str(tmp_path)))
+
+
+def test_autotune_tuned_block_drives_kernel_result_identical(tmp_path):
+    """The tuned block is a launch parameter only: same numbers at any block."""
+    from repro.kernels import autotune
+    from repro.kernels.guided_update import kernel as K
+
+    autotune.clear_memo()
+    block = autotune.tuned_block(
+        "guided_momentum_update", jnp.float32, dirname=str(tmp_path),
+        measure=lambda k, d, b: float(b))  # smallest candidate wins
+    assert block == min(autotune.CANDIDATES)
+
+    w = randn(1000)
+    g = randn(1000) * 0.01
+    ws = w + 0.05
+    m = jnp.abs(w) * 0.1
+    a = K.guided_momentum_update_raw(w, g, ws, m, 0.2, 0.04, 0.9, block=block)
+    b = K.guided_momentum_update_raw(w, g, ws, m, 0.2, 0.04, 0.9, block=256)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
