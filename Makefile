@@ -2,10 +2,13 @@
 
 PY := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast bench quickstart
+.PHONY: test test-fast bench quickstart lint
 
 test:            ## tier-1: full suite, fail fast
 	$(PY) -m pytest -x -q
+
+lint:            ## JAX-aware static analysis + dist protocol audits (DESIGN.md §12)
+	$(PY) -m repro.analysis src/
 
 test-fast:       ## skip the multi-minute @slow tests
 	$(PY) -m pytest -x -q -m "not slow"

@@ -1,0 +1,55 @@
+"""`repro.analysis` — JAX-aware static analysis & trace audits (DESIGN.md §12).
+
+Three layers of machine-checked enforcement for the hazard classes the first
+seven PRs fixed by hand:
+
+  * `repro.analysis.lint` — AST rules over `src/` (host syncs in hot loops,
+    jit-in-loop retrace hazards, trace-time mutation of captured state, f32
+    literals in f64-parity modules, missing carry donation, unscoped-x64 jnp
+    in dist), with inline allows and a committed baseline. CLI:
+    `python -m repro.analysis src/` (wired as `make lint`, gated in CI).
+  * `repro.analysis.trace` — runtime auditors: `assert_traces` (the reusable
+    retrace counter), `audit_dtypes` (jaxpr-walking f64->f32 demotion
+    finder) and `audit_donation` (non-donated large dispatch buffers).
+  * `repro.analysis.protocol` — the dist verb-grammar FSM (`check_sequence`,
+    `audit_verbs`) and the `ParameterStore` lock-discipline pass
+    (`audit_lock_discipline`).
+"""
+from repro.analysis.baseline import apply_baseline, load_baseline, save_baseline
+from repro.analysis.lint import (
+    DEFAULT_CONFIG,
+    Finding,
+    LintConfig,
+    RULES,
+    lint_source,
+    run_lint,
+)
+from repro.analysis.protocol import (
+    LIVE_FSM,
+    REPLAY_FSM,
+    VERB_GRAMMAR,
+    LockViolation,
+    ProtocolViolation,
+    audit_lock_discipline,
+    audit_verbs,
+    check_sequence,
+)
+from repro.analysis.trace import (
+    DonationReport,
+    DtypeViolation,
+    TraceCountError,
+    assert_no_demotion,
+    assert_traces,
+    audit_donation,
+    audit_dtypes,
+)
+
+__all__ = [
+    "DEFAULT_CONFIG", "Finding", "LintConfig", "RULES", "lint_source",
+    "run_lint", "apply_baseline", "load_baseline", "save_baseline",
+    "VERB_GRAMMAR", "REPLAY_FSM", "LIVE_FSM", "ProtocolViolation",
+    "LockViolation", "check_sequence", "audit_verbs",
+    "audit_lock_discipline", "TraceCountError", "assert_traces",
+    "DtypeViolation", "audit_dtypes", "assert_no_demotion",
+    "DonationReport", "audit_donation",
+]

@@ -1,0 +1,116 @@
+"""CLI: `python -m repro.analysis [paths ...]` (DESIGN.md §12, `make lint`).
+
+Runs the AST lint over the given files/trees (default: `src/`), applies the
+committed baseline plus inline allows, then — when the scanned tree contains
+`repro/dist/` — the static protocol audits (verb grammar conformance and
+ParameterStore lock discipline). Prints `path:line:col: rule-id: message`
+per finding and exits 1 on anything unsuppressed, 0 on a clean tree.
+
+  --baseline FILE      baseline path (default: ./analysis-baseline.json
+                       when present)
+  --update-baseline    rewrite the baseline from the current findings
+                       (reasons become TODOs to triage) and exit 0
+  --no-protocol        lint only
+  --list-rules         print the rule catalogue and exit
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis import baseline as B
+from repro.analysis import protocol as P
+from repro.analysis.lint import RULES, run_lint
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-aware static analysis over the repro source tree")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directory roots to scan (default: src/)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline JSON (default: ./{B.BASELINE_NAME} if "
+                         f"present)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current findings")
+    ap.add_argument("--no-protocol", action="store_true",
+                    help="skip the dist protocol/lock audits")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in RULES.items():
+            print(f"{rule:24s} {desc}")
+        return 0
+
+    paths = args.paths or ["src"]
+    for p in paths:
+        if not os.path.exists(p):
+            print(f"error: no such path {p!r}", file=sys.stderr)
+            return 2
+
+    findings = run_lint(paths)
+
+    baseline_path = args.baseline
+    if baseline_path is None and os.path.isfile(B.BASELINE_NAME):
+        baseline_path = B.BASELINE_NAME
+
+    if args.update_baseline:
+        out = baseline_path or B.BASELINE_NAME
+        B.save_baseline(out, findings)
+        print(f"wrote {len(findings)} finding(s) to {out}; edit each "
+              f"entry's reason before committing")
+        return 0
+
+    stale = []
+    if baseline_path:
+        findings, stale = B.apply_baseline(findings,
+                                           B.load_baseline(baseline_path))
+
+    failures = 0
+    for f in findings:
+        print(f.format())
+        failures += 1
+
+    if not args.no_protocol:
+        scan_roots = [p for p in paths]
+        has_dist = any(
+            os.path.basename(fp) == "store.py" and "dist" in fp.split(os.sep)
+            for fp in _walk_names(scan_roots))
+        if has_dist:
+            for msg in P.audit_verbs(root=paths[0]):
+                print(f"repro/dist: protocol-verbs: {msg}")
+                failures += 1
+            for v in P.audit_lock_discipline(root=paths[0]):
+                print(f"repro/dist/store.py: lock-discipline: {v.format()}")
+                failures += 1
+
+    for e in stale:
+        print(f"note: stale baseline entry ({e['rule']} @ {e['path']}: "
+              f"{e['line_text']!r}) — the code it covered changed; prune it",
+              file=sys.stderr)
+
+    if failures:
+        print(f"\n{failures} finding(s). Fix, add an inline "
+              f"`# lint: allow[rule-id] reason`, or baseline with "
+              f"--update-baseline (then justify each entry).",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def _walk_names(paths):
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = [d for d in dirs if d not in ("__pycache__", ".git")]
+                for f in files:
+                    yield os.path.join(root, f)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

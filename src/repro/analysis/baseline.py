@@ -1,0 +1,91 @@
+"""Baseline suppression for the lint (`repro.analysis.baseline`).
+
+The baseline is the committed list of *accepted* findings — legacy
+occurrences that are correct but match a rule's pattern (the compile-window
+timing syncs in the trainloop, for example). Each entry names its rule, file,
+the stripped source line it matches, how many identical occurrences it
+covers, and WHY it is accepted. Suppressed, not silenced: the reasons live in
+the committed file, `--update-baseline` regenerates it mechanically, and a
+stale entry (the code it covered is gone) is reported so the file shrinks
+with the debt instead of accreting.
+
+Matching is by (rule, path-suffix, stripped line text) so entries survive
+line moves and unrelated edits but break — loudly — when the flagged line
+itself changes.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Sequence, Tuple
+
+from repro.analysis.lint import Finding
+
+BASELINE_NAME = "analysis-baseline.json"
+
+
+def _key(rule: str, path: str, line_text: str) -> Tuple[str, str, str]:
+    return (rule, path.replace(os.sep, "/"), line_text.strip())
+
+
+def load_baseline(path: str) -> List[dict]:
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    entries = data["entries"] if isinstance(data, dict) else data
+    for e in entries:
+        e.setdefault("count", 1)
+        e.setdefault("reason", "")
+    return entries
+
+
+def save_baseline(path: str, findings: Sequence[Finding],
+                  reason: str = "TODO: justify or fix"):
+    """Write every current finding as an accepted entry (identical findings
+    collapse into one entry with a count). Starting point for triage — each
+    entry's reason should be edited to say why it is accepted."""
+    grouped: Dict[Tuple[str, str, str], int] = {}
+    for f in findings:
+        grouped[_key(f.rule, f.path, f.line_text)] = (
+            grouped.get(_key(f.rule, f.path, f.line_text), 0) + 1)
+    entries = [{"rule": r, "path": p, "line_text": t, "count": n,
+                "reason": reason}
+               for (r, p, t), n in sorted(grouped.items())]
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"_comment": "Accepted lint findings (DESIGN.md §12). "
+                               "Every entry needs a reason; shrink me.",
+                   "entries": entries}, fh, indent=2)
+        fh.write("\n")
+
+
+def apply_baseline(findings: Sequence[Finding], entries: Sequence[dict]
+                   ) -> Tuple[List[Finding], List[dict]]:
+    """Split findings into (unsuppressed, stale_entries). A baseline entry
+    absorbs up to `count` findings whose (rule, path-suffix, line text)
+    match; entries with unused budget are stale — their code changed or was
+    fixed — and should be pruned from the committed file."""
+    budget: Dict[Tuple[str, str, str], int] = {}
+    for e in entries:
+        budget[_key(e["rule"], e["path"], e["line_text"])] = (
+            budget.get(_key(e["rule"], e["path"], e["line_text"]), 0)
+            + int(e["count"]))
+    remaining: List[Finding] = []
+    for f in findings:
+        matched = None
+        for (rule, path, text), left in budget.items():
+            if left <= 0 or rule != f.rule or text != f.line_text.strip():
+                continue
+            fp = f.path.replace(os.sep, "/")
+            if fp == path or fp.endswith("/" + path) or path.endswith("/" + fp):
+                matched = (rule, path, text)
+                break
+        if matched is None:
+            remaining.append(f)
+        else:
+            budget[matched] -= 1
+    stale = []
+    for e in entries:
+        k = _key(e["rule"], e["path"], e["line_text"])
+        if budget.get(k, 0) > 0:
+            stale.append(e)
+            budget[k] = 0  # report an entry once even if count > 1 unused
+    return remaining, stale

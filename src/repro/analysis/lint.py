@@ -1,0 +1,529 @@
+"""AST lint for JAX hazards (`repro.analysis.lint`, DESIGN.md §12).
+
+Every class of bug the first seven PRs fixed by hand maps onto a static
+pattern; this module machine-checks them over `src/`:
+
+  host-sync-in-hot-loop  host-device synchronization (`.item()`, `float()`,
+                         `np.asarray`/`np.array`, `jax.device_get`,
+                         `block_until_ready`) inside a configured hot scope —
+                         the per-token serve path, the per-chunk fit loop.
+                         One *batched* transfer per step is the accepted
+                         shape; it carries an inline allow with its reason.
+  jit-in-loop            `jax.jit` / `pl.pallas_call` constructed inside a
+                         syntactic loop body: every iteration builds a fresh
+                         callable, so the compilation cache never hits
+                         (the retrace regressions of PR 5).
+  traced-mutation        Python-side mutation of captured state inside a
+                         traced function (a jit target or a function nested
+                         in one): appends to closed-over lists, attribute /
+                         subscript stores on parameters or captured objects.
+                         Runs at trace time only — silently stale on cache
+                         hits, duplicated on retraces.
+  f32-in-f64-path        a `float32` dtype literal in an f64-parity-critical
+                         module (`engine/delaysim.py`, `dist/*`,
+                         `kernels/guided_update/*`). The one legitimate form
+                         — `promote_types(dtype, float32)`, which promotes
+                         and never demotes — is recognized and allowed.
+  missing-donate         `jax.jit(...)` without `donate_argnums` in the
+                         carry-threaded modules (trainloop / serve engine /
+                         delaysim): a non-donated carry doubles train-state
+                         memory and defeats in-place buffer reuse.
+  x64-unscoped-jnp       `jnp` usage in `dist/*` outside a
+                         `with enable_x64():` scope — the store's strategy
+                         hooks only preserve float64 parity because every
+                         jnp round-trip is x64-scoped (DESIGN.md §10).
+
+Suppression is explicit, never silent:
+
+  * an inline `# lint: allow[rule-id] reason` on the flagged line (or the
+    line above) documents an accepted occurrence at the site;
+  * the committed baseline file (`analysis-baseline.json`, see
+    `repro.analysis.baseline`) carries the legacy exceptions — e.g. the
+    compile-window timing syncs in the trainloop — each with a reason.
+
+`python -m repro.analysis src/` runs the lint plus the dist protocol audits
+and exits nonzero on any unsuppressed finding, printing `path:line:col:
+rule-id: message`.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# ----------------------------------------------------------------- findings
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint hit. `line_text` (the stripped source line) is the baseline
+    fingerprint: stable under line moves, invalidated by edits."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    line_text: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: {self.message}"
+
+
+# ------------------------------------------------------------ configuration
+
+
+@dataclasses.dataclass
+class LintConfig:
+    """Which modules each rule applies to. Paths are matched as suffixes
+    (file patterns) or substrings (patterns ending in '/'). `hot_scopes`
+    maps a module to {function qualname: "all" | "loops"} — "all" treats the
+    whole function body as hot (per-token serve methods), "loops" only its
+    syntactic loop bodies (the fit loop's function also does one-time
+    setup/teardown that may legitimately sync)."""
+
+    hot_scopes: Dict[str, Dict[str, str]] = dataclasses.field(default_factory=dict)
+    f64_parity_modules: Tuple[str, ...] = ()
+    donate_modules: Tuple[str, ...] = ()
+    x64_modules: Tuple[str, ...] = ()
+
+
+DEFAULT_CONFIG = LintConfig(
+    hot_scopes={
+        "repro/serve/engine.py": {
+            "ServeEngine.step": "all",            # per-token decode dispatch
+            "ServeEngine._prefill_into": "all",   # per-request admission
+            "ServeEngine._accept": "all",         # per-token bookkeeping
+        },
+        "repro/engine/trainloop.py": {
+            "fit": "loops",          # the chunk dispatch loop
+            "step_records": "all",   # per-dispatch metrics materialization
+        },
+    },
+    f64_parity_modules=(
+        "repro/engine/delaysim.py",
+        "repro/dist/",
+        "repro/kernels/guided_update/",
+    ),
+    donate_modules=(
+        "repro/engine/trainloop.py",
+        "repro/serve/engine.py",
+        "repro/engine/delaysim.py",
+    ),
+    x64_modules=("repro/dist/",),
+)
+
+#: method names whose bare call is a device->host synchronization
+_SYNC_METHODS = {"item", "block_until_ready"}
+#: (module alias, attr) call pairs that synchronize
+_SYNC_CALLS = {
+    ("np", "asarray"), ("np", "array"),
+    ("numpy", "asarray"), ("numpy", "array"),
+    ("jax", "device_get"), ("jax", "block_until_ready"),
+}
+#: list/set/dict/deque mutators that leak state out of a trace
+_MUTATING_METHODS = {
+    "append", "extend", "insert", "remove", "clear", "pop", "popleft",
+    "appendleft", "update", "add", "discard", "setdefault", "popitem",
+}
+
+
+def _norm(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+def _module_match(path: str, patterns: Sequence[str]) -> bool:
+    p = _norm(path)
+    for pat in patterns:
+        if pat.endswith("/"):
+            if pat in p:
+                return True
+        elif p.endswith(pat):
+            return True
+    return False
+
+
+def _scope_table(path: str, config: LintConfig) -> Dict[str, str]:
+    p = _norm(path)
+    for pat, scopes in config.hot_scopes.items():
+        if p.endswith(pat):
+            return scopes
+    return {}
+
+
+# ----------------------------------------------------------------- visitor
+
+
+def _call_target(node: ast.Call) -> Tuple[Optional[str], Optional[str]]:
+    """('np', 'asarray') for np.asarray(...), (None, 'float') for float(...)."""
+    f = node.func
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+        return f.value.id, f.attr
+    if isinstance(f, ast.Attribute):
+        return None, f.attr
+    if isinstance(f, ast.Name):
+        return None, f.id
+    return None, None
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    base, attr = _call_target(node)
+    return attr == "jit" and base in (None, "jax")
+
+
+def _is_pallas_call(node: ast.Call) -> bool:
+    _, attr = _call_target(node)
+    return attr == "pallas_call"
+
+
+def _bound_names(fn: ast.AST) -> set:
+    """Names bound inside a function (params, assignments, loop/with/except
+    targets, comprehensions, nested defs, imports) — everything else a Name
+    refers to is captured from an enclosing scope."""
+    bound = set()
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        a = fn.args
+        for arg in (a.posonlyargs + a.args + a.kwonlyargs
+                    + ([a.vararg] if a.vararg else [])
+                    + ([a.kwarg] if a.kwarg else [])):
+            bound.add(arg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, (ast.Store, ast.Del)):
+            bound.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            if node is not fn:
+                bound.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                bound.add((alias.asname or alias.name).split(".")[0])
+        elif isinstance(node, ast.ExceptHandler) and node.name:
+            bound.add(node.name)
+    return bound
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, source: str, config: LintConfig):
+        self.path = _norm(path)
+        self.lines = source.splitlines()
+        self.config = config
+        self.findings: List[Finding] = []
+        self.scopes = _scope_table(path, config)
+        self.f64_module = _module_match(path, config.f64_parity_modules)
+        self.donate_module = _module_match(path, config.donate_modules)
+        self.x64_module = _module_match(path, config.x64_modules)
+        self._class_stack: List[str] = []
+        self._fn_stack: List[ast.AST] = []
+        self._loop_depth = 0
+        self._hot_mode: List[str] = []        # active hot-scope modes
+        self._x64_depth = 0
+        self._traced_depth = 0                # inside a jit-target function
+        self._traced_bound: List[set] = []    # locals of each traced frame
+        self._promote_spans: List[Tuple[int, int]] = []
+        self._jit_names: set = set()
+
+    # ---------------------------------------------------------------- emit
+
+    def _emit(self, rule: str, node: ast.AST, message: str):
+        line = getattr(node, "lineno", 1)
+        text = self.lines[line - 1].strip() if line - 1 < len(self.lines) else ""
+        self.findings.append(Finding(rule=rule, path=self.path, line=line,
+                                     col=getattr(node, "col_offset", 0),
+                                     message=message, line_text=text))
+
+    # ------------------------------------------------------------- prepass
+
+    def prepass(self, tree: ast.Module):
+        """Collect (a) names of functions handed to jax.jit / lax.scan, so
+        their bodies count as traced; (b) promote_types call spans, inside
+        which float32 literals are the accepted promotion idiom."""
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            base, attr = _call_target(node)
+            if attr == "promote_types":
+                self._promote_spans.append(
+                    (node.lineno, node.end_lineno or node.lineno))
+            if _is_jit_call(node) and node.args:
+                for sub in ast.walk(node.args[0]):
+                    if isinstance(sub, ast.Name):
+                        self._jit_names.add(sub.id)
+            if attr == "scan" and base in ("lax", None) and node.args:
+                for sub in ast.walk(node.args[0]):
+                    if isinstance(sub, ast.Name):
+                        self._jit_names.add(sub.id)
+
+    # ------------------------------------------------------------ scaffolds
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self._class_stack.append(node.name)
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+    def _qualname(self, name: str) -> str:
+        return ".".join(self._class_stack + [name]) if self._class_stack else name
+
+    def _is_traced_def(self, node) -> bool:
+        if node.name in self._jit_names:
+            return True
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call):
+                if _is_jit_call(dec):
+                    return True
+                base, attr = _call_target(dec)
+                if attr == "partial" and dec.args:
+                    first = dec.args[0]
+                    if isinstance(first, (ast.Attribute, ast.Name)):
+                        b, a = _call_target(ast.Call(func=first, args=[], keywords=[]))
+                        if a == "jit" and b in (None, "jax"):
+                            return True
+            elif isinstance(dec, (ast.Attribute, ast.Name)):
+                b, a = _call_target(ast.Call(func=dec, args=[], keywords=[]))
+                if a == "jit" and b in (None, "jax"):
+                    return True
+        return False
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        qual = self._qualname(node.name)
+        mode = self.scopes.get(qual)
+        traced = self._is_traced_def(node) or self._traced_depth > 0
+        self._fn_stack.append(node)
+        if mode:
+            self._hot_mode.append(mode)
+        if traced:
+            self._traced_depth += 1
+            self._traced_bound.append(_bound_names(node))
+        saved_loop = self._loop_depth
+        self._loop_depth = 0
+        self.generic_visit(node)
+        self._loop_depth = saved_loop
+        if traced:
+            self._traced_depth -= 1
+            self._traced_bound.pop()
+        if mode:
+            self._hot_mode.pop()
+        self._fn_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _visit_loop(self, node):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_For = visit_While = visit_AsyncFor = _visit_loop
+
+    def visit_With(self, node: ast.With):
+        x64 = any(
+            isinstance(item.context_expr, ast.Call)
+            and _call_target(item.context_expr)[1] == "enable_x64"
+            for item in node.items)
+        if x64:
+            self._x64_depth += 1
+        self.generic_visit(node)
+        if x64:
+            self._x64_depth -= 1
+
+    # ----------------------------------------------------------- the rules
+
+    def _in_hot_scope(self) -> bool:
+        if not self._hot_mode:
+            return False
+        mode = self._hot_mode[-1]
+        return mode == "all" or (mode == "loops" and self._loop_depth > 0)
+
+    def _traced_local(self, name: str) -> bool:
+        """Is `name` bound inside the innermost traced function?"""
+        return bool(self._traced_bound) and name in self._traced_bound[-1]
+
+    def visit_Call(self, node: ast.Call):
+        base, attr = _call_target(node)
+        # host-sync-in-hot-loop
+        if self._in_hot_scope():
+            if attr in _SYNC_METHODS and isinstance(node.func, ast.Attribute):
+                self._emit("host-sync-in-hot-loop", node,
+                           f".{attr}() forces a host-device sync in a hot "
+                           f"scope; batch transfers into one jax.device_get "
+                           f"per step/chunk")
+            elif (base, attr) in _SYNC_CALLS:
+                self._emit("host-sync-in-hot-loop", node,
+                           f"{base}.{attr}(...) synchronizes device->host in "
+                           f"a hot scope; batch transfers into one "
+                           f"jax.device_get per step/chunk")
+            elif base is None and attr == "float" and isinstance(node.func, ast.Name):
+                self._emit("host-sync-in-hot-loop", node,
+                           "float(...) on a device value blocks in a hot "
+                           "scope; keep scalars on device or batch the "
+                           "transfer")
+        # jit-in-loop
+        if self._loop_depth > 0 and (_is_jit_call(node) or _is_pallas_call(node)):
+            what = "pl.pallas_call" if _is_pallas_call(node) else "jax.jit"
+            self._emit("jit-in-loop", node,
+                       f"{what} constructed inside a loop body retraces every "
+                       f"iteration (fresh callable, cold cache); hoist it out "
+                       f"or memoize")
+        # missing-donate
+        if (self.donate_module and _is_jit_call(node)
+                and not any(kw.arg in ("donate_argnums", "donate_argnames")
+                            for kw in node.keywords)):
+            self._emit("missing-donate", node,
+                       "jax.jit without donate_argnums in a carry-threaded "
+                       "module: a non-donated carry doubles train-state "
+                       "memory across dispatches")
+        # traced-mutation: captured-object mutators
+        if (self._traced_depth and attr in _MUTATING_METHODS
+                and isinstance(node.func, ast.Attribute)
+                and isinstance(node.func.value, ast.Name)
+                and not self._traced_local(node.func.value.id)):
+            self._emit("traced-mutation", node,
+                       f"{node.func.value.id}.{attr}(...) mutates captured "
+                       f"state inside a traced function; runs at trace time "
+                       f"only (stale on cache hits, doubled on retraces)")
+        self.generic_visit(node)
+
+    def _check_store_target(self, target: ast.AST):
+        if not self._traced_depth:
+            return
+        if isinstance(target, ast.Attribute) and isinstance(target.value, ast.Name):
+            name = target.value.id
+            if not self._traced_local(name) or self._is_param(name):
+                self._emit("traced-mutation", target,
+                           f"attribute store on `{name}` inside a traced "
+                           f"function is a Python-side effect the compiled "
+                           f"program never sees")
+        elif isinstance(target, ast.Subscript) and isinstance(target.value, ast.Name):
+            name = target.value.id
+            if not self._traced_local(name) or self._is_param(name):
+                self._emit("traced-mutation", target,
+                           f"subscript store on `{name}` inside a traced "
+                           f"function mutates host state at trace time; use "
+                           f"`.at[...].set(...)`")
+
+    def _is_param(self, name: str) -> bool:
+        if not self._fn_stack:
+            return False
+        fn = self._fn_stack[-1]
+        a = fn.args
+        params = {x.arg for x in a.posonlyargs + a.args + a.kwonlyargs}
+        if a.vararg:
+            params.add(a.vararg.arg)
+        if a.kwarg:
+            params.add(a.kwarg.arg)
+        return name in params
+
+    def visit_Assign(self, node: ast.Assign):
+        for t in node.targets:
+            self._check_store_target(t)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        self._check_store_target(node.target)
+        if (self._traced_depth and isinstance(node.target, ast.Name)
+                and not self._traced_local(node.target.id)):
+            self._emit("traced-mutation", node,
+                       f"augmented assignment to captured `{node.target.id}` "
+                       f"inside a traced function leaks trace-time state")
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign):
+        if node.value is not None:
+            self._check_store_target(node.target)
+        self.generic_visit(node)
+
+    def _f32_allowed(self, node: ast.AST) -> bool:
+        line = getattr(node, "lineno", 0)
+        return any(a <= line <= b for a, b in self._promote_spans)
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if (self.f64_module and node.attr == "float32"
+                and isinstance(node.value, ast.Name)
+                and node.value.id in ("np", "jnp", "numpy")
+                and not self._f32_allowed(node)):
+            self._emit("f32-in-f64-path", node,
+                       f"{node.value.id}.float32 literal in an f64-parity-"
+                       f"critical module; derive the dtype from the weights "
+                       f"(promote_types) or it silently truncates the f64 "
+                       f"trajectory")
+        self.generic_visit(node)
+
+    def visit_Constant(self, node: ast.Constant):
+        if (self.f64_module and node.value == "float32"
+                and not self._f32_allowed(node)):
+            self._emit("f32-in-f64-path", node,
+                       "'float32' dtype string in an f64-parity-critical "
+                       "module; derive the dtype from the weights")
+
+    def visit_Name(self, node: ast.Name):
+        if (self.x64_module and node.id == "jnp"
+                and isinstance(node.ctx, ast.Load) and self._x64_depth == 0):
+            self._emit("x64-unscoped-jnp", node,
+                       "jnp use in repro.dist outside `with enable_x64():` — "
+                       "float64 parity only survives the jnp round-trip "
+                       "inside an x64 scope (DESIGN.md §10)")
+
+
+# --------------------------------------------------------------- inline allow
+
+
+def _inline_allowed(finding: Finding, lines: List[str]) -> bool:
+    """`# lint: allow[rule-id] reason` on the finding's line or the line
+    above documents an accepted occurrence at the site."""
+    tag = f"lint: allow[{finding.rule}]"
+    for ln in (finding.line, finding.line - 1):
+        if 1 <= ln <= len(lines) and tag in lines[ln - 1]:
+            return True
+    return False
+
+
+# ------------------------------------------------------------------- driver
+
+
+def lint_source(source: str, path: str,
+                config: LintConfig = DEFAULT_CONFIG) -> List[Finding]:
+    """Lint one module's source text. Inline-allowed findings are dropped
+    here; baseline suppression happens in `repro.analysis.baseline`."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(rule="syntax-error", path=_norm(path),
+                        line=e.lineno or 1, col=e.offset or 0,
+                        message=str(e.msg), line_text="")]
+    linter = _Linter(path, source, config)
+    linter.prepass(tree)
+    linter.visit(tree)
+    lines = source.splitlines()
+    return [f for f in linter.findings if not _inline_allowed(f, lines)]
+
+
+def iter_py_files(paths: Sequence[str]):
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+def run_lint(paths: Sequence[str],
+             config: LintConfig = DEFAULT_CONFIG) -> List[Finding]:
+    """Lint every .py file under `paths` (files or directory roots)."""
+    findings: List[Finding] = []
+    for fp in iter_py_files(paths):
+        with open(fp, encoding="utf-8") as fh:
+            findings.extend(lint_source(fh.read(), fp, config))
+    return findings
+
+
+RULES = {
+    "host-sync-in-hot-loop": "host-device sync call inside a configured hot scope",
+    "jit-in-loop": "jax.jit / pl.pallas_call constructed inside a loop body",
+    "traced-mutation": "Python-side mutation of captured state in a traced function",
+    "f32-in-f64-path": "float32 dtype literal in an f64-parity-critical module",
+    "missing-donate": "jax.jit without donate_argnums in a carry-threaded module",
+    "x64-unscoped-jnp": "jnp use in repro.dist outside a `with enable_x64()` scope",
+}

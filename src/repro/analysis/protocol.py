@@ -1,0 +1,387 @@
+"""Static checks for the `repro.dist` wire protocol and lock discipline
+(`repro.analysis.protocol`, DESIGN.md §12).
+
+The async parameter server's correctness rests on two invariants no unit
+test of a single process can see:
+
+  * the hello/pull/push/step/bye verb grammar — chief and worker must agree
+    on the alphabet and the legal orderings (DESIGN.md §10's protocol table).
+    `VERB_GRAMMAR` + the per-mode FSMs encode the table; `check_sequence`
+    validates a concrete conversation trace against it, and `audit_verbs`
+    statically extracts every verb `chief.py`/`worker.py` put on the wire (or
+    dispatch on) and proves the sources speak exactly the grammar — a typo'd
+    verb or an unhandled message shows up here, not as a hung socket;
+
+  * lock discipline in `ParameterStore` — the store is the one mutable object
+    shared by every connection thread, serialized by a single condition lock.
+    `audit_lock_discipline` classifies the store's mutable attributes (any
+    attribute assigned or container-mutated outside `__init__`), then walks
+    every method proving each mutable access happens under `with self.cond:`
+    — directly, or transitively via callers that hold the lock (the
+    `_apply_locked` convention). A public method touching mutable state
+    lock-free, or an internal helper reachable lock-free, is a violation.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+# ------------------------------------------------------------- the grammar
+
+#: who may put which verb on the wire
+VERB_GRAMMAR = {
+    "worker": frozenset({"hello", "pull", "push", "step", "bye"}),
+    "chief": frozenset({"welcome", "work", "done", "applied"}),
+}
+
+#: (state, verb) -> state; the interleaved wire conversation of ONE worker
+#: connection, both directions. See dist/protocol.py's message table.
+REPLAY_FSM = {
+    ("init", "hello"): "greeted",
+    ("greeted", "welcome"): "ready",
+    ("ready", "pull"): "pulled",
+    ("pulled", "work"): "working",
+    ("pulled", "done"): "drained",
+    ("working", "push"): "pushed",
+    ("pushed", "applied"): "ready",
+    ("drained", "bye"): "closed",
+}
+LIVE_FSM = {
+    ("init", "hello"): "greeted",
+    ("greeted", "welcome"): "ready",
+    ("ready", "step"): "stepped",      # push-and-pull fused; g may be None
+    ("stepped", "work"): "ready",
+    ("stepped", "done"): "drained",
+    ("drained", "bye"): "closed",
+}
+_FSMS = {"replay": REPLAY_FSM, "live": LIVE_FSM}
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolViolation:
+    """One illegal transition (or unknown verb) in a conversation trace."""
+
+    index: int
+    verb: str
+    state: str
+    allowed: Tuple[str, ...]
+
+    def format(self) -> str:
+        ok = ", ".join(self.allowed) or "<nothing: conversation over>"
+        return (f"message[{self.index}] {self.verb!r} illegal in state "
+                f"{self.state!r} (allowed: {ok})")
+
+
+def check_sequence(verbs: Sequence[str], mode: str = "replay",
+                   require_closed: bool = True) -> List[ProtocolViolation]:
+    """Validate an interleaved wire trace (both directions) against the
+    verb state machine of `mode`. Returns the violations; empty == legal.
+    `require_closed` additionally demands the conversation ends in the
+    closed state (bye exchanged)."""
+    try:
+        fsm = _FSMS[mode]
+    except KeyError:
+        raise ValueError(f"mode must be one of {sorted(_FSMS)}, got {mode!r}")
+    state = "init"
+    violations: List[ProtocolViolation] = []
+    for i, verb in enumerate(verbs):
+        nxt = fsm.get((state, verb))
+        if nxt is None:
+            allowed = tuple(sorted(v for (s, v) in fsm if s == state))
+            violations.append(ProtocolViolation(
+                index=i, verb=verb, state=state, allowed=allowed))
+            # stay in state: report every downstream illegality, not just one
+        else:
+            state = nxt
+    if require_closed and not violations and state != "closed":
+        allowed = tuple(sorted(v for (s, v) in fsm if s == state))
+        violations.append(ProtocolViolation(
+            index=len(verbs), verb="<end>", state=state, allowed=allowed))
+    return violations
+
+
+# ------------------------------------------------ static source extraction
+
+
+def _sent_verbs(tree: ast.AST) -> Set[str]:
+    """String literals leading any tuple handed to a .send(...) call —
+    covers plain tuples, conditional expressions and ("work",) + out."""
+    verbs: Set[str] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "send"):
+            continue
+        for arg in node.args:
+            for sub in ast.walk(arg):
+                if (isinstance(sub, ast.Tuple) and sub.elts
+                        and isinstance(sub.elts[0], ast.Constant)
+                        and isinstance(sub.elts[0].value, str)):
+                    verbs.add(sub.elts[0].value)
+    return verbs
+
+
+def _dispatched_verbs(tree: ast.AST, alphabet: Set[str]) -> Set[str]:
+    """Verbs a source compares a received message head against (== or !=),
+    restricted to the protocol alphabet (mode strings etc. are not verbs)."""
+    verbs: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Compare):
+            continue
+        for comp in [node.left] + list(node.comparators):
+            if (isinstance(comp, ast.Constant) and isinstance(comp.value, str)
+                    and comp.value in alphabet):
+                verbs.add(comp.value)
+    return verbs
+
+
+def audit_verbs(root: Optional[str] = None,
+                sources: Optional[Dict[str, str]] = None) -> List[str]:
+    """Prove chief.py and worker.py speak exactly the verb grammar.
+
+    Pass `root` (a tree containing repro/dist/) to read the real sources, or
+    `sources` = {"chief": <src>, "worker": <src>} for fixtures. Checks:
+      * each side sends exactly its half of the alphabet (a typo'd or novel
+        verb on the wire fails here);
+      * the chief dispatches on every worker verb (an unhandled request
+        would hang a socket, or hit the unknown-verb ValueError at runtime).
+    Returns human-readable violation strings; empty == conformant.
+    """
+    if sources is None:
+        if root is None:
+            raise ValueError("audit_verbs needs a source root or a sources dict")
+        sources = {}
+        for name in ("chief", "worker"):
+            path = _find_dist_file(root, f"{name}.py")
+            if path is None:
+                return [f"cannot locate dist/{name}.py under {root}"]
+            with open(path, encoding="utf-8") as fh:
+                sources[name] = fh.read()
+    trees = {name: ast.parse(src) for name, src in sources.items()}
+    alphabet = set(VERB_GRAMMAR["worker"]) | set(VERB_GRAMMAR["chief"])
+    violations: List[str] = []
+    for side, peer in (("worker", "chief"), ("chief", "worker")):
+        sent = _sent_verbs(trees[side])
+        expected = set(VERB_GRAMMAR[side])
+        for verb in sorted(sent - expected):
+            violations.append(
+                f"{side}.py sends {verb!r}, not a {side} verb in the grammar "
+                f"(allowed: {', '.join(sorted(expected))})")
+        for verb in sorted(expected - sent):
+            violations.append(
+                f"{side}.py never sends {verb!r}; the {peer} will wait for "
+                f"a message that cannot arrive")
+    handled = _dispatched_verbs(trees["chief"], alphabet)
+    for verb in sorted(set(VERB_GRAMMAR["worker"]) - handled):
+        violations.append(
+            f"chief.py never dispatches on worker verb {verb!r}; the request "
+            f"would fall through to the unknown-verb error")
+    return violations
+
+
+def _find_dist_file(root: str, filename: str) -> Optional[str]:
+    direct = os.path.join(root, "repro", "dist", filename)
+    if os.path.isfile(direct):
+        return direct
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in ("__pycache__", ".git")]
+        if filename in filenames and os.path.basename(dirpath) == "dist":
+            return os.path.join(dirpath, filename)
+    return None
+
+
+# -------------------------------------------------------- lock discipline
+
+
+@dataclasses.dataclass(frozen=True)
+class LockViolation:
+    """A mutable-attribute access reachable without the store lock."""
+
+    method: str
+    attr: str
+    line: int
+    why: str
+
+    def format(self) -> str:
+        return f"{self.method}:{self.line}: self.{self.attr} — {self.why}"
+
+
+class _MethodInfo:
+    def __init__(self, name: str):
+        self.name = name
+        # (attr, locked, lineno) for every self.<mutable-attr> touch
+        self.accesses: List[Tuple[str, bool, int]] = []
+        # (callee, locked, lineno) for every self.<method>() call
+        self.calls: List[Tuple[str, bool, int]] = []
+
+
+def _collect_class(tree: ast.AST, classname: str) -> Optional[ast.ClassDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == classname:
+            return node
+    return None
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if (isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+_CONTAINER_MUTATORS = {
+    "append", "extend", "insert", "remove", "clear", "pop", "popleft",
+    "appendleft", "update", "add", "discard", "setdefault", "popitem",
+}
+
+
+def audit_lock_discipline(root: Optional[str] = None, *,
+                          source: Optional[str] = None,
+                          path: Optional[str] = None,
+                          classname: str = "ParameterStore",
+                          lock_attrs: Sequence[str] = ("cond", "lock"),
+                          exempt: Sequence[str] = ("__init__",),
+                          ) -> List[LockViolation]:
+    """Prove every mutable-attribute access of `classname` is lock-covered.
+
+    Mutable attributes are inferred: anything assigned (plain, augmented,
+    subscript or del) or container-mutated outside `__init__`. An access is
+    covered when it sits inside `with self.cond:` (any name in `lock_attrs`),
+    or when the enclosing method is only ever reachable through call sites
+    that hold the lock (`_apply_locked` and its helpers). Violations:
+
+      * a public (non-underscore) method touching mutable state lock-free —
+        public methods are entry points and must take the lock themselves;
+      * an internal helper with a lock-free mutable access that is reachable
+        from a public method without passing a lock acquisition, or that has
+        no intra-class call sites at all (nothing proves its callers lock).
+    """
+    if source is None:
+        if path is None:
+            if root is None:
+                raise ValueError("audit_lock_discipline needs root, source "
+                                 "or path")
+            path = _find_dist_file(root, "store.py")
+            if path is None:
+                return [LockViolation("<module>", "", 0,
+                                      f"cannot locate dist/store.py under {root}")]
+        with open(path, encoding="utf-8") as fh:
+            source = fh.read()
+    tree = ast.parse(source)
+    cls = _collect_class(tree, classname)
+    if cls is None:
+        return [LockViolation("<module>", "", 0,
+                              f"class {classname} not found")]
+
+    methods = [n for n in cls.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+    # ---- pass 1: infer the mutable attribute set
+    mutable: Set[str] = set()
+    for m in methods:
+        if m.name == "__init__":
+            continue
+        for node in ast.walk(m):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    attr = _self_attr(t)
+                    if attr:
+                        mutable.add(attr)
+                    if isinstance(t, (ast.Subscript, ast.Starred)):
+                        attr = _self_attr(t.value)
+                        if attr:
+                            mutable.add(attr)
+            elif isinstance(node, ast.Delete):
+                for t in node.targets:
+                    if isinstance(t, ast.Subscript):
+                        attr = _self_attr(t.value)
+                        if attr:
+                            mutable.add(attr)
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Attribute)
+                  and node.func.attr in _CONTAINER_MUTATORS):
+                attr = _self_attr(node.func.value)
+                if attr:
+                    mutable.add(attr)
+    mutable -= set(lock_attrs)
+
+    # ---- pass 2: per-method accesses and intra-class calls, lock-scoped
+    infos: Dict[str, _MethodInfo] = {}
+
+    def scan(node: ast.AST, info: _MethodInfo, locked: bool):
+        if isinstance(node, ast.With):
+            holds = any(_self_attr(item.context_expr) in lock_attrs
+                        or (isinstance(item.context_expr, ast.Call)
+                            and _self_attr(item.context_expr.func) in lock_attrs)
+                        for item in node.items)
+            for child in ast.iter_child_nodes(node):
+                scan(child, info, locked or holds)
+            return
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+            callee = _self_attr(node.func)
+            if callee is not None:
+                info.calls.append((callee, locked, node.lineno))
+        attr = _self_attr(node)
+        if attr in mutable:
+            info.accesses.append((attr, locked, node.lineno))
+        for child in ast.iter_child_nodes(node):
+            scan(child, info, locked)
+
+    for m in methods:
+        info = _MethodInfo(m.name)
+        for stmt in m.body:
+            scan(stmt, info, False)
+        infos[m.name] = info
+
+    # ---- pass 3: reachability — can a lock-free path reach the access?
+    call_sites: Dict[str, List[Tuple[str, bool]]] = {}
+    for caller, info in infos.items():
+        for callee, locked, _ in info.calls:
+            if callee in infos:
+                call_sites.setdefault(callee, []).append((caller, locked))
+
+    def unlocked_exposure(name: str, seen: Set[str]) -> Optional[Tuple[str, int]]:
+        """First lock-free mutable access reachable from `name` entered
+        without the lock (directly or via lock-free intra-class calls)."""
+        if name in seen:
+            return None
+        seen.add(name)
+        info = infos[name]
+        for attr, locked, line in info.accesses:
+            if not locked:
+                return (attr, line)
+        for callee, locked, line in info.calls:
+            if locked or callee not in infos:
+                continue
+            hit = unlocked_exposure(callee, seen)
+            if hit is not None:
+                return hit
+        return None
+
+    violations: List[LockViolation] = []
+    for name, info in infos.items():
+        if name in exempt:
+            continue
+        exposure = unlocked_exposure(name, set())
+        if exposure is None:
+            continue
+        attr, line = exposure
+        if not name.startswith("_"):
+            violations.append(LockViolation(
+                method=name, attr=attr, line=line,
+                why=f"public entry point reaches self.{attr} without "
+                    f"holding the store lock"))
+        else:
+            sites = call_sites.get(name, [])
+            if not sites:
+                violations.append(LockViolation(
+                    method=name, attr=attr, line=line,
+                    why=f"helper touches self.{attr} lock-free and has no "
+                        f"intra-class call sites proving its callers lock"))
+            # helpers WITH call sites are judged through their callers'
+            # exposure (the caller either locks or is itself flagged)
+    return violations

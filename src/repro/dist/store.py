@@ -232,7 +232,8 @@ class ParameterStore:
 
     def final_snapshot(self):
         if self._ckpt is not None:
-            self._snapshot()
+            with self.cond:
+                self._snapshot()
             self._ckpt.close()
 
     # ---------------------------------------------------------- replay mode
@@ -286,5 +287,7 @@ class ParameterStore:
             return self.version
 
     def staleness_hist(self) -> dict:
-        counts = np.bincount(np.asarray(self.staleness, np.int64)) if self.staleness else []
+        with self.cond:
+            staleness = list(self.staleness)
+        counts = np.bincount(np.asarray(staleness, np.int64)) if staleness else []
         return {int(s): int(n) for s, n in enumerate(counts) if n}

@@ -198,6 +198,7 @@ def _build_runner(key, strategy: DelayCompensator, T: int, n_classes: int,
         carry, avgs = jax.lax.scan(step, carry0, xs)
         return carry[0], avgs
 
+    # lint: allow[missing-donate] runner is LRU-cached and re-invoked; inputs must survive the call
     fn = jax.jit(jax.vmap(one_seed, in_axes=(0, 0, 0, 0, 0, 0, 0, None, None)))
     _RUNNERS[key] = fn
     while len(_RUNNERS) > _RUNNERS_MAX:

@@ -81,7 +81,7 @@ def step_records(m, first: int, indices=None) -> List[dict]:
     logging cadence (the launcher) pass only their log offsets and an empty
     selection never syncs at all.
     """
-    import numpy as np
+    import jax
 
     shape = getattr(m["loss"], "shape", ())
     if indices is None:
@@ -89,9 +89,11 @@ def step_records(m, first: int, indices=None) -> List[dict]:
     indices = list(indices)
     if not indices:
         return []
-    arrs = {name: np.asarray(m[key]) for name, key in _METRIC_KEYS}
+    # ONE batched host transfer for all metrics of the dispatch
+    vals = jax.device_get(tuple(m[key] for _, key in _METRIC_KEYS))  # lint: allow[host-sync-in-hot-loop] the single per-dispatch sync point
+    arrs = dict(zip((name for name, _ in _METRIC_KEYS), vals))
     return [{"step": first + i,
-             **{name: float(a[i] if shape else a) for name, a in arrs.items()}}
+             **{name: float(a[i] if shape else a) for name, a in arrs.items()}}  # lint: allow[host-sync-in-hot-loop] host np scalars after the batched get
             for i in indices]
 
 

@@ -351,12 +351,12 @@ def test_needs_correction_flags():
     ("guided_fused", 1),     # replay folded into THIS backward: one forward
     ("guided_two_pass", 2),  # the literal second update traces a second one
 ])
-def test_fused_step_compiles_without_second_forward(strategy, n_forwards,
-                                                    monkeypatch):
+def test_fused_step_compiles_without_second_forward(strategy, n_forwards):
     """The jitted step of a non-correcting strategy must not trace
     weighted_grad_fn's second forward+backward at all (HLO size / compile
     time), while two_pass still gets its lax.cond'd replay."""
     import repro.models.transformer as T
+    from repro.analysis import assert_traces
     from repro.data import make_batch_for
     from repro.engine import mesh as M
     from repro.optim import constant, get_optimizer
@@ -365,21 +365,13 @@ def test_fused_step_compiles_without_second_forward(strategy, n_forwards,
     cfg, gcfg = spec.model_config(), spec.to_guided_config()
     opt = get_optimizer("sgd")
     strat = Trainer.from_spec(spec).strategy
-    calls = {"n": 0}
-    real = T.forward_train
-
-    def counting(*a, **k):
-        calls["n"] += 1
-        return real(*a, **k)
-
-    monkeypatch.setattr(T, "forward_train", counting)
     step = M.build_train_step(cfg, gcfg, opt, M.build_ctx("local"),
                               constant(1e-2), n_workers=2, strategy=strat)
     params, _, gstate = M.init_train_state(
         jax.random.PRNGKey(0), cfg, gcfg, opt, n_workers=2, strategy=strat)
     batch = {k: jnp.asarray(v) for k, v in make_batch_for(cfg, 8, 4, seed=0).items()}
-    jax.make_jaxpr(step)(params, gstate, batch)
-    assert calls["n"] == n_forwards
+    with assert_traces(n_forwards, (T, "forward_train")):
+        jax.make_jaxpr(step)(params, gstate, batch)
 
 
 # --------------------------------------------- compile/warm split (satellite)
