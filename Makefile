@@ -2,13 +2,21 @@
 
 PY := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast bench quickstart lint
+.PHONY: test test-fast bench quickstart lint locks modelcheck check
 
 test:            ## tier-1: full suite, fail fast
 	$(PY) -m pytest -x -q
 
-lint:            ## JAX-aware static analysis + dist protocol audits (DESIGN.md §12)
+lint:            ## JAX-aware static analysis + lockset pass + dist protocol audits (DESIGN.md §12/§13)
 	$(PY) -m repro.analysis src/
+
+locks:           ## the repo-wide lockset/lock-order discovery table (DESIGN.md §13)
+	$(PY) -m repro.analysis.locks src/ --report
+
+modelcheck:      ## explore dist-protocol interleavings + seeded-bug selfcheck (DESIGN.md §13)
+	$(PY) -m repro.analysis.modelcheck
+
+check: lint modelcheck  ## every static/model gate CI runs, in one target
 
 test-fast:       ## skip the multi-minute @slow tests
 	$(PY) -m pytest -x -q -m "not slow"

@@ -14,6 +14,17 @@ seven PRs fixed by hand:
   * `repro.analysis.protocol` — the dist verb-grammar FSM (`check_sequence`,
     `audit_verbs`) and the `ParameterStore` lock-discipline pass
     (`audit_lock_discipline`).
+
+PR 9 adds the concurrency correctness layer (DESIGN.md §13):
+
+  * `repro.analysis.locks` — repo-wide static lockset analysis + lock-order
+    graph over every concurrent class (`run_locks`, `analyze_source`).
+  * `repro.analysis.sanitize` — the opt-in runtime race sanitizer
+    (`REPRO_TSAN=1`): instrumented lock/thread wrappers reporting lock-order
+    inversions and unlocked shared writes.
+  * `repro.analysis.modelcheck` — systematic interleaving exploration of the
+    dist protocol (bounded DFS + sleep sets) with executable invariants and
+    seeded-bug fixtures (`explore`, `ReplayModel`, `LiveModel`).
 """
 from repro.analysis.baseline import apply_baseline, load_baseline, save_baseline
 from repro.analysis.lint import (
@@ -34,6 +45,22 @@ from repro.analysis.protocol import (
     audit_verbs,
     check_sequence,
 )
+from repro.analysis.locks import (
+    LOCK_RULES,
+    ClassModel,
+    analyze_source,
+    lock_order_graph,
+    run_locks,
+)
+from repro.analysis.modelcheck import (
+    BUGS,
+    SUITE,
+    LiveModel,
+    ReplayModel,
+    Stats,
+    Violation,
+    explore,
+)
 from repro.analysis.trace import (
     DonationReport,
     DtypeViolation,
@@ -52,4 +79,7 @@ __all__ = [
     "audit_lock_discipline", "TraceCountError", "assert_traces",
     "DtypeViolation", "audit_dtypes", "assert_no_demotion",
     "DonationReport", "audit_donation",
+    "LOCK_RULES", "ClassModel", "analyze_source", "lock_order_graph",
+    "run_locks", "BUGS", "SUITE", "LiveModel", "ReplayModel", "Stats",
+    "Violation", "explore",
 ]

@@ -1,16 +1,19 @@
 """CLI: `python -m repro.analysis [paths ...]` (DESIGN.md §12, `make lint`).
 
-Runs the AST lint over the given files/trees (default: `src/`), applies the
-committed baseline plus inline allows, then — when the scanned tree contains
-`repro/dist/` — the static protocol audits (verb grammar conformance and
-ParameterStore lock discipline). Prints `path:line:col: rule-id: message`
-per finding and exits 1 on anything unsuppressed, 0 on a clean tree.
+Runs the AST lint plus the repo-wide lockset/lock-order pass
+(`repro.analysis.locks`) over the given files/trees (default: `src/`),
+applies the committed baseline plus inline allows, then — when the scanned
+tree contains `repro/dist/` — the static protocol audits (verb grammar
+conformance and ParameterStore lock discipline). Prints
+`path:line:col: rule-id: message` per finding and exits 1 on anything
+unsuppressed, 0 on a clean tree.
 
   --baseline FILE      baseline path (default: ./analysis-baseline.json
                        when present)
   --update-baseline    rewrite the baseline from the current findings
                        (reasons become TODOs to triage) and exit 0
-  --no-protocol        lint only
+  --no-protocol        skip the dist protocol/lock audits
+  --no-locks           skip the repo-wide lockset pass
   --list-rules         print the rule catalogue and exit
 """
 from __future__ import annotations
@@ -22,6 +25,7 @@ import sys
 from repro.analysis import baseline as B
 from repro.analysis import protocol as P
 from repro.analysis.lint import RULES, run_lint
+from repro.analysis.locks import LOCK_RULES, run_locks
 
 
 def main(argv=None) -> int:
@@ -37,11 +41,13 @@ def main(argv=None) -> int:
                     help="rewrite the baseline from current findings")
     ap.add_argument("--no-protocol", action="store_true",
                     help="skip the dist protocol/lock audits")
+    ap.add_argument("--no-locks", action="store_true",
+                    help="skip the repo-wide lockset pass")
     ap.add_argument("--list-rules", action="store_true")
     args = ap.parse_args(argv)
 
     if args.list_rules:
-        for rule, desc in RULES.items():
+        for rule, desc in {**RULES, **LOCK_RULES}.items():
             print(f"{rule:24s} {desc}")
         return 0
 
@@ -52,6 +58,8 @@ def main(argv=None) -> int:
             return 2
 
     findings = run_lint(paths)
+    if not args.no_locks:
+        findings += run_locks(paths)[0]
 
     baseline_path = args.baseline
     if baseline_path is None and os.path.isfile(B.BASELINE_NAME):

@@ -32,6 +32,10 @@ pattern; this module machine-checks them over `src/`:
                          `with enable_x64():` scope — the store's strategy
                          hooks only preserve float64 parity because every
                          jnp round-trip is x64-scoped (DESIGN.md §10).
+  lock-not-with          bare `.acquire()` / `.release()` instead of
+                         `with lock:` — an exception between the pair leaks
+                         the lock forever. The sanitizer's instrumentation
+                         shims are the accepted (baselined) exception.
 
 Suppression is explicit, never silent:
 
@@ -355,6 +359,14 @@ class _Linter(ast.NodeVisitor):
                            "float(...) on a device value blocks in a hot "
                            "scope; keep scalars on device or batch the "
                            "transfer")
+        # lock-not-with
+        if (attr in ("acquire", "release")
+                and isinstance(node.func, ast.Attribute)):
+            self._emit("lock-not-with", node,
+                       f"bare .{attr}() instead of `with lock:` — an "
+                       f"exception between acquire and release leaks the "
+                       f"lock and deadlocks every later taker; only "
+                       f"instrumentation shims may do this (baselined)")
         # jit-in-loop
         if self._loop_depth > 0 and (_is_jit_call(node) or _is_pallas_call(node)):
             what = "pl.pallas_call" if _is_pallas_call(node) else "jax.jit"
@@ -526,4 +538,5 @@ RULES = {
     "f32-in-f64-path": "float32 dtype literal in an f64-parity-critical module",
     "missing-donate": "jax.jit without donate_argnums in a carry-threaded module",
     "x64-unscoped-jnp": "jnp use in repro.dist outside a `with enable_x64()` scope",
+    "lock-not-with": "bare .acquire()/.release() instead of `with lock:`",
 }

@@ -1,0 +1,705 @@
+"""Repo-wide static lockset analysis (`repro.analysis.locks`, DESIGN.md §13).
+
+PR 8's `audit_lock_discipline` proved the pattern on one hardcoded class
+(`ParameterStore`); this pass generalizes it to every concurrent class in the
+tree. A class is *concurrent* when it creates a `threading.Lock` / `RLock` /
+`Condition` or starts a `threading.Thread` — today that discovers
+`dist/store.py` (ParameterStore), `dist/chief.py` (Chief),
+`checkpoint/writer.py` (AsyncCheckpointer) and `data/prefetch.py`
+(ChunkPrefetcher); `serve/engine.py` has no threading and passes trivially.
+
+Inference rules (the Eraser lockset discipline, adapted to AST):
+
+  1. *Shared attributes.* `self.X` is shared-mutable when it is assigned,
+     aug-assigned, subscript-stored, deleted, or container-mutated
+     (append/update/...) in any method other than `__init__`. Attributes
+     assigned only during `__init__` are construction-immutable (publication
+     happens-before the threads that read them); synchronization primitives
+     themselves (locks, events, queues, thread handles, `threading.local`)
+     are exempt.
+  2. *Locally held locks.* `with self.L:` (or any dotted `with self.a.b:`)
+     adds the lock to the held set for the scope of the `with`; a
+     `Condition.wait_for` predicate evaluates under the re-acquired lock, so
+     scanning the lambda with the lock held is exact.
+  3. *Guaranteed entry locksets* propagate interprocedurally: a method's
+     entry lockset is the intersection over all intra-class call sites of
+     (caller's entry lockset | locks held at the call). Public methods,
+     dunders, and `Thread(target=...)` targets are entry points (empty entry
+     lockset); helpers never called from a reachable method are conservative
+     (empty) rather than trusted.
+  4. *The discipline.* Every shared attribute must have a non-empty
+     intersection of effective locksets (entry | held) over all of its
+     non-`__init__` accesses. An access with an empty effective lockset is
+     `lock-shared-unlocked`; all-locked accesses with no *common* lock are
+     `lock-inconsistent` (two locks that don't exclude each other).
+
+Lock-ordering graph: nodes are `Class.attr` lock identities (dotted
+acquisitions resolve through `__init__` parameter annotations, so
+`Chief.store.cond` and `ParameterStore.cond` unify); an edge A -> B is
+recorded whenever B is acquired — directly or via a transitive self-call —
+while A is held. A strongly-connected component of >= 2 nodes is a potential
+deadlock: `lock-order-cycle`. Self-edges are not reported (Condition wraps an
+RLock; single-lock reentrancy is a kind the AST cannot decide).
+
+Findings are `repro.analysis.lint.Finding`s, so the inline
+`# lint: allow[rule-id] reason` tag and the committed baseline apply
+unchanged. CLI: `python -m repro.analysis.locks src/` (also folded into
+`python -m repro.analysis` and `make check`); `--report` prints the
+discovery table CI archives as proof of coverage.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.lint import Finding, _inline_allowed, iter_py_files
+
+#: factory callables whose result is a mutual-exclusion lock (with-able)
+_LOCK_FACTORIES = {"Lock", "RLock", "Condition"}
+#: factory callables whose result is a sync primitive but not a lockset lock
+_SYNC_FACTORIES = {
+    "Event", "Semaphore", "BoundedSemaphore", "Barrier", "local",
+    "Queue", "SimpleQueue", "LifoQueue", "PriorityQueue", "Thread",
+}
+#: container methods that mutate their receiver (shared with lint/protocol)
+_CONTAINER_MUTATORS = {
+    "append", "extend", "insert", "remove", "clear", "pop", "popleft",
+    "appendleft", "update", "add", "discard", "setdefault", "popitem",
+}
+
+LOCK_RULES = {
+    "lock-shared-unlocked": (
+        "shared attribute of a concurrent class accessed without any lock"),
+    "lock-inconsistent": (
+        "shared attribute accessed under locks with no common member"),
+    "lock-order-cycle": (
+        "lock-ordering graph contains a cycle (potential deadlock)"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Access:
+    """One read/write of a shared attribute, with the locally held locks."""
+
+    attr: str
+    method: str
+    kind: str                   # "read" | "write"
+    line: int
+    col: int
+    held: FrozenSet[str]
+
+
+@dataclasses.dataclass
+class MethodSummary:
+    name: str
+    lineno: int
+    accesses: List[Access] = dataclasses.field(default_factory=list)
+    #: (lock name, line, locks held at the acquisition)
+    acquisitions: List[Tuple[str, int, FrozenSet[str]]] = (
+        dataclasses.field(default_factory=list))
+    #: (callee method name, line, locks held at the call)
+    calls: List[Tuple[str, int, FrozenSet[str]]] = (
+        dataclasses.field(default_factory=list))
+
+
+@dataclasses.dataclass
+class ClassModel:
+    """Everything the lockset pass inferred about one class."""
+
+    name: str
+    path: str
+    lineno: int
+    lock_attrs: Set[str] = dataclasses.field(default_factory=set)
+    sync_attrs: Set[str] = dataclasses.field(default_factory=set)
+    thread_targets: Set[str] = dataclasses.field(default_factory=set)
+    creates_thread: bool = False
+    #: attr -> class name, from annotated `__init__` params / AnnAssign
+    attr_types: Dict[str, str] = dataclasses.field(default_factory=dict)
+    mutable_attrs: Set[str] = dataclasses.field(default_factory=set)
+    methods: Dict[str, MethodSummary] = dataclasses.field(default_factory=dict)
+    #: method -> guaranteed entry lockset (filled by `entry_locksets`)
+    entry: Dict[str, FrozenSet[str]] = dataclasses.field(default_factory=dict)
+
+    @property
+    def concurrent(self) -> bool:
+        return bool(self.lock_attrs) or self.creates_thread
+
+    def is_entry(self, method: str) -> bool:
+        return (not method.startswith("_")
+                or (method.startswith("__") and method.endswith("__"))
+                or method in self.thread_targets)
+
+
+# -------------------------------------------------------------- AST helpers
+
+
+def _self_attr_path(node: ast.AST, selfname: str) -> Optional[str]:
+    """'cond' for self.cond, 'store.cond' for self.store.cond, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name) and node.id == selfname:
+        return ".".join(reversed(parts))
+    return None
+
+
+def _factory_name(value: ast.AST) -> Optional[str]:
+    """'Lock' for threading.Lock() / Lock(); None for anything else."""
+    if isinstance(value, ast.Call):
+        f = value.func
+        if isinstance(f, ast.Attribute):
+            return f.attr
+        if isinstance(f, ast.Name):
+            return f.id
+    return None
+
+
+def _ann_name(ann: Optional[ast.AST]) -> Optional[str]:
+    """Last component of an annotation ('ParameterStore' for both the bare
+    name and a dotted/stringified form); None when unannotated."""
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Name):
+        return ann.id
+    if isinstance(ann, ast.Attribute):
+        return ann.attr
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return ann.value.split(".")[-1].strip()
+    return None
+
+
+def _selfname(fn: ast.FunctionDef) -> Optional[str]:
+    args = fn.args.posonlyargs + fn.args.args
+    return args[0].arg if args else None
+
+
+# ----------------------------------------------------------- model building
+
+
+class _MethodScanner:
+    """Recursive scan of one method body tracking the locally held lockset."""
+
+    def __init__(self, model: ClassModel, summary: MethodSummary,
+                 selfname: str):
+        self.model = model
+        self.sum = summary
+        self.selfname = selfname
+
+    def _is_lockish(self, path: str) -> bool:
+        # single-component paths must be known lock attrs; dotted paths
+        # (another object's lock, e.g. self.store.cond) are trusted as locks
+        # when used as a bare `with` context — files/devices enter via calls.
+        return path in self.model.lock_attrs or "." in path
+
+    def _record_access(self, attr: str, kind: str, node: ast.AST,
+                       held: FrozenSet[str]):
+        self.sum.accesses.append(Access(
+            attr=attr, method=self.sum.name, kind=kind,
+            line=node.lineno, col=node.col_offset, held=held))
+
+    def _write_target(self, target: ast.AST, held: FrozenSet[str]):
+        """Classify an assignment/deletion target; returns True if handled."""
+        if isinstance(target, ast.Attribute):
+            path = _self_attr_path(target, self.selfname)
+            if path is not None and "." not in path:
+                self._record_access(path, "write", target, held)
+                return True
+        elif isinstance(target, ast.Subscript):
+            path = _self_attr_path(target.value, self.selfname)
+            if path is not None and "." not in path:
+                self._record_access(path, "write", target, held)
+            self.scan(target.slice, held)
+            return True
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                if not self._write_target(elt, held):
+                    self.scan(elt, held)
+            return True
+        return False
+
+    def scan(self, node: ast.AST, held: FrozenSet[str]):
+        if isinstance(node, ast.With):
+            acquired = []
+            for item in node.items:
+                expr = item.context_expr
+                if isinstance(expr, ast.Attribute):
+                    path = _self_attr_path(expr, self.selfname)
+                    if path is not None and self._is_lockish(path):
+                        self.sum.acquisitions.append((path, expr.lineno, held))
+                        acquired.append(path)
+                        continue
+                self.scan(expr, held)
+                if item.optional_vars is not None:
+                    self._write_target(item.optional_vars, held)
+            inner = held | frozenset(acquired)
+            for stmt in node.body:
+                self.scan(stmt, inner)
+            return
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                if not self._write_target(t, held):
+                    self.scan(t, held)
+            if isinstance(node, ast.AugAssign):
+                # aug-assign reads the old value too; the write record covers
+                # the lockset requirement, no separate read needed
+                pass
+            if getattr(node, "value", None) is not None:
+                self.scan(node.value, held)
+            return
+        if isinstance(node, ast.Delete):
+            for t in node.targets:
+                if not self._write_target(t, held):
+                    self.scan(t, held)
+            return
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute):
+                recv = _self_attr_path(f.value, self.selfname)
+                if recv is not None and "." not in recv and recv:
+                    if f.attr in _CONTAINER_MUTATORS:
+                        self._record_access(recv, "write", f.value, held)
+                    elif recv not in self.model.lock_attrs | self.model.sync_attrs:
+                        self._record_access(recv, "read", f.value, held)
+                elif (isinstance(f.value, ast.Name)
+                        and f.value.id == self.selfname):
+                    self.sum.calls.append((f.attr, node.lineno, held))
+                else:
+                    self.scan(f.value, held)
+            else:
+                self.scan(f, held)
+            for a in node.args:
+                self.scan(a, held)
+            for kw in node.keywords:
+                self.scan(kw.value, held)
+            return
+        if isinstance(node, ast.Attribute):
+            path = _self_attr_path(node, self.selfname)
+            if (path is not None and "." not in path
+                    and isinstance(node.ctx, ast.Load)):
+                if path not in self.model.lock_attrs | self.model.sync_attrs:
+                    self._record_access(path, "read", node, held)
+                return
+            # dotted self.a.b read: the inner self.a is the interesting access
+            if path is not None:
+                first = path.split(".")[0]
+                if first not in self.model.lock_attrs | self.model.sync_attrs:
+                    self._record_access(first, "read", node, held)
+                return
+            self.scan(node.value, held)
+            return
+        if isinstance(node, (ast.Lambda, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            # nested callables inherit the current lockset: the dominant use
+            # here is `cond.wait_for(lambda: ...)`, whose predicate runs
+            # under the re-acquired lock
+            body = node.body if isinstance(node.body, list) else [node.body]
+            for stmt in body:
+                self.scan(stmt, held)
+            return
+        for child in ast.iter_child_nodes(node):
+            self.scan(child, held)
+
+
+def _inventory_class(cls: ast.ClassDef, path: str) -> ClassModel:
+    """Pass 1: attribute inventory (locks / sync / thread targets / mutable)
+    + pass 2: per-method access scan with local locksets."""
+    model = ClassModel(name=cls.name, path=path, lineno=cls.lineno)
+    methods = [n for n in cls.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+    # pass 1 — inventory
+    mutated_outside_init: Set[str] = set()
+    for fn in methods:
+        selfname = _selfname(fn)
+        if selfname is None:
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                fac = _factory_name(node)
+                if fac == "Thread":
+                    model.creates_thread = True
+                    for kw in node.keywords:
+                        if kw.arg == "target":
+                            tpath = _self_attr_path(kw.value, selfname)
+                            if tpath and "." not in tpath:
+                                model.thread_targets.add(tpath)
+                f = node.func
+                if (isinstance(f, ast.Attribute)
+                        and f.attr in _CONTAINER_MUTATORS):
+                    rpath = _self_attr_path(f.value, selfname)
+                    if (rpath and "." not in rpath
+                            and fn.name != "__init__"):
+                        mutated_outside_init.add(rpath)
+            targets: List[ast.AST] = []
+            if isinstance(node, ast.Assign):
+                targets = list(node.targets)
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+                targets = [node.target]
+            elif isinstance(node, ast.Delete):
+                targets = list(node.targets)
+            for t in targets:
+                apath = None
+                if isinstance(t, ast.Attribute):
+                    apath = _self_attr_path(t, selfname)
+                elif isinstance(t, ast.Subscript):
+                    apath = _self_attr_path(t.value, selfname)
+                if apath is None or "." in apath:
+                    continue
+                if isinstance(node, ast.Assign):
+                    fac = _factory_name(node.value)
+                    if fac in _LOCK_FACTORIES:
+                        model.lock_attrs.add(apath)
+                        continue
+                    if fac in _SYNC_FACTORIES:
+                        model.sync_attrs.add(apath)
+                        continue
+                if fn.name != "__init__":
+                    mutated_outside_init.add(apath)
+                if (fn.name == "__init__" and isinstance(node, ast.Assign)
+                        and isinstance(node.value, ast.Name)):
+                    ann = _init_param_type(fn, node.value.id)
+                    if ann:
+                        model.attr_types[apath] = ann
+            if (isinstance(node, ast.AnnAssign)
+                    and isinstance(node.target, ast.Attribute)):
+                apath = _self_attr_path(node.target, selfname)
+                ann = _ann_name(node.annotation)
+                if apath and "." not in apath and ann:
+                    model.attr_types.setdefault(apath, ann)
+    model.mutable_attrs = (mutated_outside_init
+                           - model.lock_attrs - model.sync_attrs)
+
+    # pass 2 — access scan
+    for fn in methods:
+        selfname = _selfname(fn)
+        if selfname is None:
+            continue
+        summary = MethodSummary(name=fn.name, lineno=fn.lineno)
+        scanner = _MethodScanner(model, summary, selfname)
+        for stmt in fn.body:
+            scanner.scan(stmt, frozenset())
+        model.methods[fn.name] = summary
+    return model
+
+
+def _init_param_type(init: ast.FunctionDef, param: str) -> Optional[str]:
+    for arg in (init.args.posonlyargs + init.args.args
+                + init.args.kwonlyargs):
+        if arg.arg == param:
+            return _ann_name(arg.annotation)
+    return None
+
+
+def collect_models(source: str, path: str) -> List[ClassModel]:
+    """Parse one module and build a `ClassModel` per concurrent class."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError:
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            model = _inventory_class(node, path.replace(os.sep, "/"))
+            if model.concurrent:
+                out.append(model)
+    return out
+
+
+# -------------------------------------------------------- entry lockset prop
+
+
+def entry_locksets(model: ClassModel) -> Dict[str, FrozenSet[str]]:
+    """Guaranteed-held-at-entry lockset per method: entry points get the
+    empty set; a helper gets the intersection over its intra-class call
+    sites of (caller entry | held-at-call); orphans are conservative-empty.
+    Monotone-decreasing fixpoint, so cycles terminate."""
+    entry: Dict[str, FrozenSet[str]] = {
+        m: frozenset() for m in model.methods if model.is_entry(m)}
+    changed = True
+    while changed:
+        changed = False
+        for m, summ in model.methods.items():
+            if m not in entry:
+                continue
+            base = entry[m]
+            for callee, _line, held in summ.calls:
+                if callee not in model.methods or model.is_entry(callee):
+                    continue
+                contrib = base | held
+                if callee not in entry:
+                    entry[callee] = contrib
+                    changed = True
+                elif entry[callee] - contrib:
+                    entry[callee] &= contrib
+                    changed = True
+    for m in model.methods:
+        entry.setdefault(m, frozenset())
+    model.entry = entry
+    return entry
+
+
+# ------------------------------------------------------------- the discipline
+
+
+def _fmt_lockset(locks: FrozenSet[str]) -> str:
+    return "{" + ", ".join(sorted(locks)) + "}" if locks else "no lock"
+
+
+def check_lock_discipline(model: ClassModel,
+                          lines: List[str]) -> List[Finding]:
+    """lock-shared-unlocked / lock-inconsistent findings for one class."""
+    entry = entry_locksets(model)
+    findings: List[Finding] = []
+    for attr in sorted(model.mutable_attrs):
+        sites = []
+        for m, summ in model.methods.items():
+            if m == "__init__":
+                continue
+            for acc in summ.accesses:
+                if acc.attr == attr:
+                    sites.append((acc, entry[m] | acc.held))
+        if not sites:
+            continue
+        common = frozenset.intersection(*[eff for _, eff in sites])
+        if common:
+            continue
+        unlocked = [(acc, eff) for acc, eff in sites if not eff]
+        if unlocked:
+            acc, _ = next(((a, e) for a, e in unlocked if a.kind == "write"),
+                          unlocked[0])
+            others = frozenset().union(*[eff for _, eff in sites])
+            hint = (f" (other sites hold {_fmt_lockset(others)})"
+                    if others else "")
+            msg = (f"{model.name}.{attr} is shared across threads but "
+                   f"`{acc.method}` {acc.kind}s it with no lock held{hint}; "
+                   f"every access to a shared attribute must hold a common "
+                   f"lock")
+            findings.append(_finding("lock-shared-unlocked", model.path,
+                                     acc.line, acc.col, msg, lines))
+        else:
+            per = sorted({f"{acc.method}:{_fmt_lockset(eff)}"
+                          for acc, eff in sites})
+            acc = sites[0][0]
+            msg = (f"{model.name}.{attr} is accessed under locks with no "
+                   f"common member ({'; '.join(per)}); two different locks "
+                   f"do not exclude each other")
+            findings.append(_finding("lock-inconsistent", model.path,
+                                     acc.line, acc.col, msg, lines))
+    return findings
+
+
+# ---------------------------------------------------------- lock-order graph
+
+
+def _lock_node(model: ClassModel, lockname: str) -> str:
+    """Global identity of a lock: 'ParameterStore.cond' both for the store's
+    own `self.cond` and for `Chief`'s `self.store.cond` (resolved through
+    the annotated `__init__` parameter)."""
+    parts = lockname.split(".")
+    if len(parts) == 1:
+        return f"{model.name}.{lockname}"
+    owner = model.attr_types.get(parts[0])
+    if owner:
+        return f"{owner}.{'.'.join(parts[1:])}"
+    return f"{model.name}.{lockname}"
+
+
+def lock_order_graph(models: Sequence[ClassModel]
+                     ) -> Dict[Tuple[str, str], Tuple[str, int]]:
+    """(held, acquired) -> one witness (path, line) per ordered lock pair,
+    including acquisitions reached through transitive self-calls."""
+    edges: Dict[Tuple[str, str], Tuple[str, int]] = {}
+    for model in models:
+        entry = model.entry or entry_locksets(model)
+        # transitive closure: locks a method may acquire, directly or via
+        # self-calls (monotone-increasing fixpoint)
+        closure: Dict[str, Set[str]] = {
+            m: {name for name, _l, _h in s.acquisitions}
+            for m, s in model.methods.items()}
+        changed = True
+        while changed:
+            changed = False
+            for m, summ in model.methods.items():
+                for callee, _line, _held in summ.calls:
+                    extra = closure.get(callee, set()) - closure[m]
+                    if extra:
+                        closure[m] |= extra
+                        changed = True
+        for m, summ in model.methods.items():
+            for name, line, held in summ.acquisitions:
+                eff = entry[m] | held
+                node = _lock_node(model, name)
+                for h in eff:
+                    hn = _lock_node(model, h)
+                    if hn != node:
+                        edges.setdefault((hn, node), (model.path, line))
+            for callee, line, held in summ.calls:
+                eff = entry[m] | held
+                if not eff or callee not in model.methods:
+                    continue
+                for name in closure.get(callee, ()):
+                    node = _lock_node(model, name)
+                    for h in eff:
+                        hn = _lock_node(model, h)
+                        if hn != node:
+                            edges.setdefault((hn, node), (model.path, line))
+    return edges
+
+
+def find_cycles(edges: Dict[Tuple[str, str], Tuple[str, int]]
+                ) -> List[List[str]]:
+    """Cycles in the lock-order graph (each reported once, as a node list
+    `[a, b, ..., a]`), via DFS from each node in sorted order."""
+    adj: Dict[str, List[str]] = {}
+    for a, b in edges:
+        adj.setdefault(a, []).append(b)
+        adj.setdefault(b, [])
+    cycles: List[List[str]] = []
+    seen_cycles: Set[FrozenSet[str]] = set()
+
+    def dfs(start: str, node: str, path: List[str], onpath: Set[str]):
+        for nxt in sorted(adj.get(node, ())):
+            if nxt == start:
+                key = frozenset(path)
+                if key not in seen_cycles:
+                    seen_cycles.add(key)
+                    cycles.append(path + [start])
+            elif nxt not in onpath and nxt > start:
+                # only walk nodes > start so each cycle is found from its
+                # smallest node exactly once
+                dfs(start, nxt, path + [nxt], onpath | {nxt})
+
+    for n in sorted(adj):
+        dfs(n, n, [n], {n})
+    return cycles
+
+
+def check_lock_order(models: Sequence[ClassModel],
+                     sources: Dict[str, List[str]]) -> List[Finding]:
+    edges = lock_order_graph(models)
+    findings = []
+    for cyc in find_cycles(edges):
+        path, line = edges[(cyc[0], cyc[1])]
+        msg = (f"lock-ordering cycle {' -> '.join(cyc)}: two threads taking "
+               f"these locks in opposite orders can deadlock; fix a global "
+               f"acquisition order")
+        findings.append(_finding("lock-order-cycle", path, line, 0, msg,
+                                 sources.get(path, [])))
+    return findings
+
+
+# ------------------------------------------------------------------- driver
+
+
+def _finding(rule: str, path: str, line: int, col: int, msg: str,
+             lines: List[str]) -> Finding:
+    text = lines[line - 1].strip() if 0 < line <= len(lines) else ""
+    return Finding(rule=rule, path=path, line=line, col=col, message=msg,
+                   line_text=text)
+
+
+def analyze_source(source: str, path: str
+                   ) -> Tuple[List[Finding], List[ClassModel]]:
+    """Lockset + order analysis of one module (the unit-test entry point).
+    Inline `# lint: allow[...]` tags are honored."""
+    models = collect_models(source, path)
+    lines = source.splitlines()
+    findings: List[Finding] = []
+    for m in models:
+        findings.extend(check_lock_discipline(m, lines))
+    findings.extend(check_lock_order(models, {m.path: lines for m in models}))
+    return ([f for f in findings if not _inline_allowed(f, lines)], models)
+
+
+def run_locks(paths: Sequence[str]
+              ) -> Tuple[List[Finding], List[ClassModel]]:
+    """Analyze every .py file under `paths`. The lock-order graph is built
+    globally so cross-class edges (Chief holding its own lock while taking
+    the store's) order against the store's internal nesting."""
+    models: List[ClassModel] = []
+    sources: Dict[str, List[str]] = {}
+    findings: List[Finding] = []
+    for fp in iter_py_files(paths):
+        with open(fp, encoding="utf-8") as fh:
+            source = fh.read()
+        lines = source.splitlines()
+        for m in collect_models(source, fp):
+            models.append(m)
+            sources[m.path] = lines
+            findings.extend(
+                f for f in check_lock_discipline(m, lines)
+                if not _inline_allowed(f, lines))
+    findings.extend(
+        f for f in check_lock_order(models, sources)
+        if not _inline_allowed(f, sources.get(f.path, [])))
+    return findings, models
+
+
+def report(models: Sequence[ClassModel]) -> str:
+    """Human-readable discovery table: what the pass found and protects."""
+    out = []
+    for m in sorted(models, key=lambda m: (m.path, m.lineno)):
+        out.append(f"{m.path}:{m.lineno}: class {m.name}")
+        out.append(f"  locks: {sorted(m.lock_attrs) or '-'}"
+                   f"  sync: {sorted(m.sync_attrs) or '-'}"
+                   f"  thread targets: {sorted(m.thread_targets) or '-'}")
+        for attr in sorted(m.mutable_attrs):
+            locksets = sorted({
+                _fmt_lockset((m.entry or {}).get(a.method, frozenset())
+                             | a.held)
+                for s in m.methods.values() for a in s.accesses
+                if a.attr == attr and s.name != "__init__"})
+            out.append(f"  shared {attr}: {', '.join(locksets) or 'init-only'}")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    import argparse
+    import sys
+
+    from repro.analysis import baseline as B
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.locks",
+        description="repo-wide static lockset + lock-order analysis")
+    ap.add_argument("paths", nargs="*", default=None)
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--report", action="store_true",
+                    help="print the discovery table (classes, locks, "
+                         "shared attrs with their locksets)")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or ["src"]
+    for p in paths:
+        if not os.path.exists(p):
+            print(f"error: no such path {p!r}", file=sys.stderr)
+            return 2
+    findings, models = run_locks(paths)
+
+    baseline_path = args.baseline
+    if baseline_path is None and os.path.isfile(B.BASELINE_NAME):
+        baseline_path = B.BASELINE_NAME
+    if baseline_path:
+        findings, _stale = B.apply_baseline(
+            findings, B.load_baseline(baseline_path))
+
+    if args.report:
+        print(report(models))
+    for f in findings:
+        print(f.format())
+    if findings:
+        print(f"\n{len(findings)} lockset finding(s).", file=sys.stderr)
+        return 1
+    print(f"locks: {len(models)} concurrent class(es) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -1,0 +1,614 @@
+"""Protocol model checker for `repro.dist` (`repro.analysis.modelcheck`,
+DESIGN.md §13).
+
+The socket pair exercises ONE interleaving per run; this module explores
+them systematically. An in-memory chief + N simulated workers step through
+the verb protocol (`REPLAY_FSM` / `LIVE_FSM`) as a nondeterministic
+transition system, and a bounded DFS with sleep-set pruning (Godefroid)
+enumerates every maximal schedule up to a depth bound — including the
+kill / restart / elastic-join / drop events of `dist/scenarios.py`.
+
+The models mirror the store's grant disciplines, not its arithmetic:
+
+  * replay — per-worker dispatch queues from a `DelaySchedule`-shaped table
+    `(t, worker, fetch_version)`; a pull blocks until
+    `version >= fetch_version`, a push until `version == t` (the store's
+    `wait_for` conditions become action-enabledness).
+  * live — free-running: `step` applies in arrival order, nondeterministic
+    drop branches, `late` counting past the budget, kill/restart events
+    closing and reopening connections, elastic joins adding workers.
+
+Invariant catalogue (each an executable predicate; see DESIGN.md §13 for
+how to add one):
+
+  version-monotone       every apply advances `version` by exactly one
+                         (state check: version == number of applies)
+  applied-exactly-once   every granted replay dispatch applies once —
+                         no lost pushes, no double applies
+  staleness-observed     each recorded staleness equals
+                         applied_version - read_version
+  schedule-order         replay's observed staleness sequence is exactly
+                         the schedule's `t - fetch_version` column
+  watchdog-termination   liveness: a state with no enabled action is
+                         legal only when the watchdog would fire (all
+                         workers dead) or the run completed its budget —
+                         a stuck state with a live worker is a lost wakeup
+  trace-legal            every connection's verb trace satisfies
+                         `protocol.check_sequence` (closed connections
+                         must reach `bye`; killed ones must be legal
+                         prefixes)
+
+Every invariant has at least one seeded-bug fixture (`BUGS`) proving the
+harness would catch its violation: nonmonotone, double-apply,
+staleness-skew, grant-early, lost-wakeup, ghost-done, wrong-verb.
+
+CLI: `python -m repro.analysis.modelcheck` explores the stock config suite
+(>= 10k interleavings at 2 workers, depth-bounded), then proves each
+seeded bug is caught; nonzero exit on any invariant violation, uncaught
+bug, or path shortfall. `make modelcheck` / `make check` wire it into CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from repro.analysis.protocol import check_sequence
+
+# ------------------------------------------------------------------ actions
+
+
+@dataclasses.dataclass(frozen=True)
+class Action:
+    """One enabled transition. `local` actions touch only their worker's
+    state (compute, bye) — the independence relation sleep sets prune on."""
+
+    label: str
+    wid: int
+    local: bool = False
+
+    @property
+    def key(self) -> Tuple[str, int]:
+        return (self.label, self.wid)
+
+
+def _independent(a: Tuple[str, int], b: Tuple[str, int],
+                 local_labels: FrozenSet[str]) -> bool:
+    """Two actions commute when they belong to different workers and at
+    least one never touches the shared store."""
+    return (a[1] != b[1]
+            and (a[0] in local_labels or b[0] in local_labels))
+
+
+@dataclasses.dataclass
+class Violation:
+    invariant: str
+    detail: str
+    path: Tuple[Tuple[str, int], ...]
+
+    def format(self) -> str:
+        trail = " ".join(f"{l}@{w}" for l, w in self.path)
+        return f"{self.invariant}: {self.detail}\n  schedule: {trail}"
+
+
+@dataclasses.dataclass
+class Stats:
+    states: int = 0
+    paths: int = 0          # maximal executions: completed + stuck + truncated
+    completed: int = 0
+    stuck: int = 0
+    truncated: int = 0
+    pruned: int = 0         # subtrees skipped by sleep sets
+    violations: List[Violation] = dataclasses.field(default_factory=list)
+
+
+# ----------------------------------------------------------------- explorer
+
+
+_LOCAL_LABELS = frozenset({"compute", "bye"})
+_MAX_VIOLATIONS = 5
+
+
+def explore(model, max_depth: int = 80,
+            max_paths: Optional[int] = 500_000) -> Stats:
+    """Bounded DFS over every schedule of `model` with sleep-set pruning.
+    Counts maximal executions and collects invariant violations (with the
+    offending action schedule as a counterexample)."""
+    stats = Stats()
+    path: List[Tuple[str, int]] = []
+
+    def violate(inv: str, detail: str):
+        if len(stats.violations) < _MAX_VIOLATIONS:
+            stats.violations.append(Violation(inv, detail, tuple(path)))
+
+    def rec(state, depth: int, sleep: FrozenSet[Tuple[str, int]]):
+        if max_paths is not None and stats.paths >= max_paths:
+            return
+        stats.states += 1
+        bad = model.invariant(state)
+        if bad:
+            violate(*bad)
+            stats.paths += 1
+            return
+        acts = model.actions(state)
+        if not acts:
+            stats.paths += 1
+            if model.is_final(state):
+                stats.completed += 1
+                bad = model.at_end(state)
+            else:
+                stats.stuck += 1
+                bad = model.at_stuck(state)
+            if bad:
+                violate(*bad)
+            return
+        enabled = [a for a in acts if a.key not in sleep]
+        if not enabled:
+            stats.pruned += 1   # covered by a sibling ordering
+            return
+        if depth >= max_depth:
+            stats.paths += 1
+            stats.truncated += 1
+            bad = model.at_stuck(state, truncated=True)
+            if bad:
+                violate(*bad)
+            return
+        explored: List[Tuple[str, int]] = []
+        for a in enabled:
+            child_sleep = frozenset(
+                b for b in (set(sleep) | set(explored))
+                if _independent(a.key, b, _LOCAL_LABELS))
+            path.append(a.key)
+            rec(model.apply(state, a), depth + 1, child_sleep)
+            path.pop()
+            explored.append(a.key)
+
+    rec(model.initial(), 0, frozenset())
+    return stats
+
+
+# ------------------------------------------------------------- replay model
+
+# worker phases
+_READY, _GRANTED, _COMPUTED, _DRAINED, _CLOSED = (
+    "ready", "granted", "computed", "drained", "closed")
+
+# state tuple layout (replay):
+#   (version, applied_counts, staleness, workers)
+#   staleness: tuple of (t, recorded_s, served_read_version) per apply
+#   workers: tuple per wid of (phase, queue_index, served_v, trace)
+
+
+class ReplayModel:
+    """The replay grant discipline over a schedule table
+    `[(t, worker, fetch_version), ...]` (t = arrival step, ascending).
+    `bug` seeds a deliberate defect (see BUGS)."""
+
+    mode = "replay"
+
+    def __init__(self, schedule: Sequence[Tuple[int, int, int]],
+                 n_workers: int = 2, bug: Optional[str] = None):
+        for t, (tt, w, fv) in enumerate(schedule):
+            if tt != t or fv > t or w >= n_workers:
+                raise ValueError(f"bad schedule row {t}: {(tt, w, fv)}")
+        self.schedule = tuple(schedule)
+        self.n_workers = n_workers
+        self.bug = bug
+        self.queues: Tuple[Tuple[Tuple[int, int], ...], ...] = tuple(
+            tuple((t, fv) for t, w, fv in schedule if w == wid)
+            for wid in range(n_workers))
+
+    def initial(self):
+        workers = tuple((_READY, 0, -1, ("hello", "welcome"))
+                        for _ in range(self.n_workers))
+        return (0, (0,) * len(self.schedule), (), workers)
+
+    def actions(self, state) -> List[Action]:
+        version, _applied, _stal, workers = state
+        acts: List[Action] = []
+        for wid, (phase, qi, _sv, _trace) in enumerate(workers):
+            q = self.queues[wid]
+            if phase == _READY:
+                if qi >= len(q):
+                    acts.append(Action("pull", wid))       # -> done/drained
+                else:
+                    t, fv = q[qi]
+                    gate = (version == fv if self.bug == "lost-wakeup"
+                            else version >= fv)
+                    if self.bug == "grant-early" or gate:
+                        acts.append(Action("pull", wid))
+            elif phase == _GRANTED:
+                acts.append(Action("compute", wid, local=True))
+            elif phase == _COMPUTED:
+                t, fv = q[qi]
+                if version == t:
+                    acts.append(Action("push", wid))
+            elif phase == _DRAINED:
+                acts.append(Action("bye", wid, local=True))
+        return acts
+
+    def apply(self, state, a: Action):
+        version, applied, stal, workers = state
+        phase, qi, sv, trace = workers[a.wid]
+        q = self.queues[a.wid]
+        if a.label == "pull":
+            if qi >= len(q):
+                w2 = (_DRAINED, qi, -1, trace + ("pull", "done"))
+            else:
+                # serve the weights AS OF the scheduled fetch version; the
+                # grant-early bug serves whatever exists at pull time
+                served = min(q[qi][1], version)
+                w2 = (_GRANTED, qi, served, trace + ("pull", "work"))
+            return (version, applied, stal,
+                    workers[:a.wid] + (w2,) + workers[a.wid + 1:])
+        if a.label == "compute":
+            w2 = (_COMPUTED, qi, sv, trace)
+            return (version, applied, stal,
+                    workers[:a.wid] + (w2,) + workers[a.wid + 1:])
+        if a.label == "bye":
+            w2 = (_CLOSED, qi, sv, trace + ("bye",))
+            return (version, applied, stal,
+                    workers[:a.wid] + (w2,) + workers[a.wid + 1:])
+        # push: the apply path. A double-apply bug applies the same granted
+        # push twice (the retry-after-timeout failure), advancing version
+        # twice — monotone holds, exactly-once does not.
+        t, _fv = q[qi]
+        n = 2 if self.bug == "double-apply" else 1
+        applied = applied[:t] + (applied[t] + n,) + applied[t + 1:]
+        bump = n
+        if self.bug == "nonmonotone" and t == 1:
+            bump = 2               # lost notify coalesces two version bumps
+        version = version + bump
+        s = t - sv
+        if self.bug == "staleness-skew":
+            s = max(0, s - 1)
+        stal = stal + ((t, s, sv),)
+        w2 = (_READY, qi + 1, -1, trace + ("push", "applied"))
+        return (version, applied, stal,
+                workers[:a.wid] + (w2,) + workers[a.wid + 1:])
+
+    # ---- invariants
+
+    def invariant(self, state):
+        version, applied, stal, _workers = state
+        if version != sum(applied):
+            return ("version-monotone",
+                    f"version={version} after {sum(applied)} applies — "
+                    f"an apply must advance the version by exactly one")
+        for t, n in enumerate(applied):
+            if n > 1:
+                return ("applied-exactly-once",
+                        f"dispatch t={t} applied {n} times")
+        for t, s, rv in stal:
+            if s != t - rv:
+                return ("staleness-observed",
+                        f"dispatch t={t} recorded staleness {s}, but "
+                        f"applied_version - read_version = {t - rv}")
+        return None
+
+    def is_final(self, state) -> bool:
+        return all(w[0] == _CLOSED for w in state[3])
+
+    def at_end(self, state):
+        version, applied, stal, workers = state
+        if any(n != 1 for n in applied):
+            missing = [t for t, n in enumerate(applied) if n == 0]
+            return ("applied-exactly-once",
+                    f"run completed with unapplied dispatches {missing}")
+        want = tuple((t, t - fv) for t, _w, fv in self.schedule)
+        got = tuple((t, s) for t, s, _rv in stal)
+        if got != want:
+            return ("schedule-order",
+                    f"staleness sequence {got} != schedule column {want}")
+        for _phase, _qi, _sv, trace in workers:
+            bad = check_sequence(trace, self.mode, require_closed=True)
+            if bad:
+                return ("trace-legal", bad[0].format())
+        return None
+
+    def at_stuck(self, state, truncated: bool = False):
+        if truncated:
+            return None     # depth bound, not a deadlock
+        version, _applied, _stal, workers = state
+        blocked = [wid for wid, w in enumerate(workers) if w[0] != _CLOSED]
+        return ("watchdog-termination",
+                f"deadlock at version={version}: workers {blocked} blocked "
+                f"with no enabled action (the watchdog would abort the run)")
+
+
+# --------------------------------------------------------------- live model
+
+# extra live phases
+_FRESH, _HASPARAMS, _DEAD = "fresh", "has_params", "dead"
+
+# state tuple layout (live):
+#   (version, late, drops, applies, events_fired, workers)
+#   workers: tuple per wid of (phase, read_v, trace, closed_traces)
+#   closed_traces: tuple of (trace, was_killed)
+
+
+class LiveModel:
+    """The live (free-running) discipline: `step` fuses push+pull, drops
+    and late pushes are counted, kill/restart/join events fire
+    nondeterministically once their version threshold is reached."""
+
+    mode = "live"
+
+    def __init__(self, total: int, n_workers: int = 2, max_drops: int = 0,
+                 events: Sequence[Tuple[str, int, int]] = (),
+                 bug: Optional[str] = None):
+        self.total = int(total)
+        self.n_workers = n_workers
+        self.max_drops = int(max_drops)
+        self.events = tuple(events)      # (op, wid, at_version)
+        self.bug = bug
+
+    def initial(self):
+        workers = tuple((_FRESH, -1, ("hello", "welcome"), ())
+                        for _ in range(self.n_workers))
+        return (0, 0, 0, 0, (False,) * len(self.events), workers)
+
+    def _budget_done(self, version: int) -> bool:
+        if self.bug == "ghost-done":
+            return version >= self.total - 1
+        return version >= self.total
+
+    def actions(self, state) -> List[Action]:
+        version, _late, drops, _applies, fired, workers = state
+        acts: List[Action] = []
+        for wid, (phase, _rv, _trace, _closed) in enumerate(workers):
+            if phase == _FRESH:
+                acts.append(Action("step0", wid))
+            elif phase == _HASPARAMS:
+                acts.append(Action("compute", wid, local=True))
+            elif phase == _COMPUTED:
+                acts.append(Action("push", wid))
+                if drops < self.max_drops and not self._budget_done(version):
+                    acts.append(Action("drop", wid))
+            elif phase == _DRAINED:
+                acts.append(Action("bye", wid, local=True))
+        for i, (op, wid, at_v) in enumerate(self.events):
+            if fired[i] or version < at_v:
+                continue
+            if op == "kill" and wid < len(workers) and \
+                    workers[wid][0] not in (_DEAD, _CLOSED):
+                acts.append(Action(f"kill[{i}]", wid))
+            elif op == "restart" and wid < len(workers) and \
+                    workers[wid][0] == _DEAD:
+                acts.append(Action(f"restart[{i}]", wid))
+            elif op == "join":
+                acts.append(Action(f"join[{i}]", len(workers)))
+        return acts
+
+    def _replace(self, workers, wid, w2):
+        return workers[:wid] + (w2,) + workers[wid + 1:]
+
+    def apply(self, state, a: Action):
+        version, late, drops, applies, fired, workers = state
+        label = a.label
+        if label.startswith(("kill[", "restart[", "join[")):
+            i = int(label[label.index("[") + 1:-1])
+            fired = fired[:i] + (True,) + fired[i + 1:]
+            if label.startswith("kill"):
+                phase, rv, trace, closed = workers[a.wid]
+                w2 = (_DEAD, -1, (), closed + ((trace, True),))
+                return (version, late, drops, applies, fired,
+                        self._replace(workers, a.wid, w2))
+            if label.startswith("restart"):
+                w2 = (_FRESH, -1, ("hello", "welcome"), workers[a.wid][3])
+                return (version, late, drops, applies, fired,
+                        self._replace(workers, a.wid, w2))
+            # join: a brand-new worker
+            return (version, late, drops, applies, fired,
+                    workers + ((_FRESH, -1, ("hello", "welcome"), ()),))
+        phase, rv, trace, closed = workers[a.wid]
+        if label == "step0":               # g=None: pure pull
+            if self._budget_done(version):
+                w2 = (_DRAINED, -1, trace + ("step", "done"), closed)
+            else:
+                w2 = (_HASPARAMS, version, trace + ("step", "work"), closed)
+            return (version, late, drops, applies, fired,
+                    self._replace(workers, a.wid, w2))
+        if label == "compute":
+            return (version, late, drops, applies, fired,
+                    self._replace(workers, a.wid, (_COMPUTED, rv, trace,
+                                                   closed)))
+        if label == "bye":
+            w2 = (_CLOSED, rv, trace + ("bye",), closed)
+            return (version, late, drops, applies, fired,
+                    self._replace(workers, a.wid, w2))
+        if label == "drop":                # scenario-dropped push
+            drops += 1
+            w2 = (_HASPARAMS, version, trace + ("step", "work"), closed)
+            return (version, late, drops, applies, fired,
+                    self._replace(workers, a.wid, w2))
+        # push (step with a gradient)
+        if self._budget_done(version):
+            late += 1
+            reply = "work" if self.bug == "wrong-verb" else "done"
+            w2 = (_DRAINED, rv, trace + ("step", reply), closed)
+            return (version, late, drops, applies, fired,
+                    self._replace(workers, a.wid, w2))
+        applies += 1
+        version += 1
+        if self._budget_done(version):
+            w2 = (_DRAINED, rv, trace + ("step", "done"), closed)
+        else:
+            w2 = (_HASPARAMS, version, trace + ("step", "work"), closed)
+        return (version, late, drops, applies, fired,
+                self._replace(workers, a.wid, w2))
+
+    # ---- invariants
+
+    def invariant(self, state):
+        version, _late, _drops, applies, _fired, workers = state
+        if version != applies:
+            return ("version-monotone",
+                    f"version={version} after {applies} applies")
+        if version > self.total:
+            return ("version-monotone",
+                    f"version={version} exceeded the step budget "
+                    f"{self.total}")
+        for wid, (phase, rv, _t, _c) in enumerate(workers):
+            if phase in (_HASPARAMS, _COMPUTED) and not 0 <= rv <= version:
+                return ("staleness-observed",
+                        f"worker {wid} holds read_version={rv} outside "
+                        f"[0, {version}] — staleness would be negative")
+        return None
+
+    def is_final(self, state) -> bool:
+        return all(w[0] in (_CLOSED, _DEAD) for w in state[5])
+
+    def at_end(self, state):
+        version, _late, _drops, _applies, _fired, workers = state
+        alive_done = [w for w in workers if w[0] == _CLOSED]
+        if alive_done and version < self.total:
+            return ("watchdog-termination",
+                    f"run ended at version={version} < budget {self.total} "
+                    f"with live workers told 'done' — the chief drained "
+                    f"them early")
+        for _phase, _rv, trace, closed_traces in workers:
+            for tr, killed in closed_traces + ((trace, False),):
+                if not tr:
+                    continue
+                bad = check_sequence(tr, self.mode,
+                                     require_closed=not killed)
+                if bad:
+                    return ("trace-legal", bad[0].format())
+        return None
+
+    def at_stuck(self, state, truncated: bool = False):
+        if truncated:
+            return None
+        version, _late, _drops, _applies, _fired, workers = state
+        alive = [wid for wid, w in enumerate(workers)
+                 if w[0] not in (_DEAD, _CLOSED)]
+        if alive:
+            return ("watchdog-termination",
+                    f"lost wakeup at version={version}: live workers "
+                    f"{alive} blocked forever (watchdog abort, not a "
+                    f"clean finish)")
+        return None    # all dead: the watchdog fires; a legal termination
+
+
+# ------------------------------------------------------------ config suites
+
+
+def _schedule(pattern: Sequence[Tuple[int, int]]) -> List[Tuple[int, int, int]]:
+    """[(worker, staleness), ...] -> schedule rows (t, worker, fetch_v)."""
+    return [(t, w, max(0, t - s)) for t, (w, s) in enumerate(pattern)]
+
+
+#: the stock exploration suite (2 workers, depth-bounded); tuned so the
+#: total path count clears the 10k acceptance floor with headroom
+SUITE: List[Tuple[str, "object"]] = [
+    ("replay/interleaved", ReplayModel(_schedule(
+        [(0, 0), (1, 0), (0, 1), (1, 2), (0, 1), (1, 1),
+         (0, 2), (1, 1), (0, 1), (1, 2)]))),
+    ("replay/bursty", ReplayModel(_schedule(
+        [(0, 0), (0, 1), (1, 0), (1, 2), (1, 1), (0, 3),
+         (0, 1), (1, 1), (1, 2), (0, 1)]))),
+    ("live/plain", LiveModel(total=6, n_workers=2)),
+    ("live/drops", LiveModel(total=4, n_workers=2, max_drops=2)),
+    ("live/kill-restart", LiveModel(
+        total=5, n_workers=2,
+        events=[("kill", 1, 1), ("restart", 1, 2)])),
+    ("live/elastic-join", LiveModel(
+        total=4, n_workers=2, events=[("join", 0, 1)])),
+]
+
+#: seeded-bug fixtures: every invariant has at least one proving the
+#: checker catches its violation
+BUGS: List[Tuple[str, str, "object"]] = [
+    ("nonmonotone", "version-monotone", ReplayModel(
+        _schedule([(0, 0), (1, 1), (0, 1), (1, 1)]), bug="nonmonotone")),
+    ("double-apply", "applied-exactly-once", ReplayModel(
+        _schedule([(0, 0), (1, 1), (0, 1), (1, 1)]), bug="double-apply")),
+    ("staleness-skew", "staleness-observed", ReplayModel(
+        _schedule([(0, 0), (1, 1), (0, 1), (1, 1)]), bug="staleness-skew")),
+    # w0's second dispatch fetches v4, which cannot exist right after its
+    # first push (version 1) — serving early grants stale-by-3 weights
+    ("grant-early", "schedule-order", ReplayModel(
+        _schedule([(0, 0), (1, 0), (1, 0), (1, 0), (1, 0), (0, 1)]),
+        bug="grant-early")),
+    ("lost-wakeup", "watchdog-termination", ReplayModel(
+        _schedule([(0, 0), (1, 2), (0, 1), (1, 2)]), bug="lost-wakeup")),
+    ("ghost-done", "watchdog-termination", LiveModel(
+        total=3, n_workers=2, bug="ghost-done")),
+    ("wrong-verb", "trace-legal", LiveModel(
+        total=2, n_workers=2, bug="wrong-verb")),
+]
+
+
+def run_suite(max_depth: int = 80, max_paths: Optional[int] = 500_000
+              ) -> Dict[str, Stats]:
+    return {name: explore(model, max_depth=max_depth, max_paths=max_paths)
+            for name, model in SUITE}
+
+
+def run_selfcheck(max_depth: int = 80) -> List[Tuple[str, str, bool, str]]:
+    """(bug, invariant, caught?, detail) per seeded fixture. `caught` means
+    the exploration reported at least one violation OF THAT invariant."""
+    out = []
+    for bug, inv, model in BUGS:
+        stats = explore(model, max_depth=max_depth, max_paths=50_000)
+        hits = [v for v in stats.violations if v.invariant == inv]
+        detail = hits[0].format() if hits else (
+            stats.violations[0].format() if stats.violations
+            else "no violation reported")
+        out.append((bug, inv, bool(hits), detail))
+    return out
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.modelcheck",
+        description="systematic interleaving exploration of the dist "
+                    "protocol with executable invariants")
+    ap.add_argument("--min-paths", type=int, default=10_000,
+                    help="fail unless at least this many interleavings "
+                         "were explored across the suite")
+    ap.add_argument("--max-depth", type=int, default=80)
+    ap.add_argument("--max-paths", type=int, default=500_000,
+                    help="per-config exploration cap")
+    ap.add_argument("--no-selfcheck", action="store_true",
+                    help="skip the seeded-bug fixtures")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    total_paths = 0
+    print(f"{'config':24s} {'paths':>8s} {'states':>9s} {'stuck':>6s} "
+          f"{'pruned':>7s}  invariants")
+    for name, stats in run_suite(max_depth=args.max_depth,
+                                 max_paths=args.max_paths).items():
+        total_paths += stats.paths
+        verdict = "OK" if not stats.violations else "VIOLATED"
+        print(f"{name:24s} {stats.paths:8d} {stats.states:9d} "
+              f"{stats.stuck:6d} {stats.pruned:7d}  {verdict}")
+        for v in stats.violations:
+            print(f"  {v.format()}")
+            failures += 1
+
+    print(f"\ntotal interleavings explored: {total_paths}")
+    if total_paths < args.min_paths:
+        print(f"FAIL: expected >= {args.min_paths} interleavings")
+        failures += 1
+
+    if not args.no_selfcheck:
+        print("\nseeded-bug fixtures (each invariant must be catchable):")
+        for bug, inv, caught, detail in run_selfcheck(
+                max_depth=args.max_depth):
+            mark = "caught" if caught else "MISSED"
+            print(f"  {bug:16s} -> {inv:22s} {mark}")
+            if not caught:
+                print(f"    {detail}")
+                failures += 1
+
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

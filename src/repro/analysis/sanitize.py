@@ -1,0 +1,374 @@
+"""Opt-in runtime race sanitizer (`repro.analysis.sanitize`, DESIGN.md §13).
+
+The static lockset pass (`repro.analysis.locks`) proves what the AST can
+see; this module watches what actually happens. When `REPRO_TSAN=1`,
+`install()` patches the *module-level* `threading` binding of the repo's own
+concurrency modules (never the stdlib's — instrumenting `queue`/`logging`
+internals would drown the signal) with a facade whose `Lock` / `RLock` /
+`Condition` / `Thread` are instrumented wrappers, and wraps `__setattr__` of
+the concurrent classes. Recorded per thread:
+
+  * the lock acquisition order — every (held, acquired) pair becomes an edge
+    in a global lock-order table; observing both (A, B) and (B, A) is a
+    lock-order inversion (two such threads can deadlock);
+  * every attribute write with the writer's current lockset — the Eraser
+    discipline: a field starts *exclusive* to its first-writing thread
+    (construction is race-free by publication), turns *shared* when a second
+    thread writes it, and from then on the intersection of write locksets
+    must stay non-empty. An empty intersection is an unlocked shared write;
+  * a thread exiting while still holding an instrumented lock.
+
+Report wire format (one line per finding, stable for CI grepping):
+
+    TSAN lock-order-inversion: <A> -> <B> at <site> conflicts with <B> -> <A> at <site>
+    TSAN unlocked-shared-write: <Class>.<attr> written by <thread> with no common lock at <site>
+    TSAN thread-exit-holding-lock: <thread> exited holding <lock>
+
+Locks are named by their creation site (`Lock@path:line`), so reports read
+against the source. `report()` returns the findings; the pytest session
+fixture (tests/conftest.py) asserts it is empty at teardown, and `install()`
+registers an atexit printer for non-pytest entry points (the dist smoke).
+Everything is inert unless `REPRO_TSAN=1` — zero overhead in normal runs.
+"""
+from __future__ import annotations
+
+import atexit
+import functools
+import os
+import sys
+import threading as _real
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+#: module path -> class names whose attribute writes are tracked
+INSTRUMENTED: Dict[str, Tuple[str, ...]] = {
+    "repro.dist.store": ("ParameterStore",),
+    "repro.dist.chief": ("Chief",),
+    "repro.data.prefetch": ("ChunkPrefetcher",),
+    "repro.checkpoint.writer": ("AsyncCheckpointer",),
+}
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_TSAN", "") == "1"
+
+
+def _site(depth: int = 2) -> str:
+    f = sys._getframe(depth)
+    return f"{os.path.basename(f.f_code.co_filename)}:{f.f_lineno}"
+
+
+# ------------------------------------------------------------- the registry
+
+
+class _Registry:
+    """Global acquisition-order table + per-thread held stack + Eraser
+    write states. One instance per install(); thread-safe via its own
+    (real, uninstrumented) lock."""
+
+    def __init__(self):
+        self._mu = _real.Lock()
+        self._tl = _real.local()
+        self._edges: Dict[Tuple[str, str], str] = {}   # (held, acq) -> site
+        self._reports: List[str] = []
+        self._seen: set = set()
+
+    # --- held-lock stack (thread-local; [lock, name, reentry count]) ---
+
+    def _held(self) -> list:
+        h = getattr(self._tl, "held", None)
+        if h is None:
+            h = self._tl.held = []
+        return h
+
+    def lockset(self) -> FrozenSet[str]:
+        return frozenset(name for _l, name, _n in self._held())
+
+    def on_acquire(self, lock, name: str, site: str) -> None:
+        held = self._held()
+        for rec in held:
+            if rec[0] is lock:
+                rec[2] += 1          # reentrant re-acquire: no new edges
+                return
+        with self._mu:
+            for _l, hname, _n in held:
+                if hname == name:
+                    # two locks from one creation site (e.g. two store
+                    # instances): aggregated to one node, not orderable
+                    continue
+                edge, rev = (hname, name), (name, hname)
+                if rev in self._edges:
+                    key = ("inv", frozenset((edge, rev)))
+                    if key not in self._seen:
+                        self._seen.add(key)
+                        self._reports.append(
+                            f"TSAN lock-order-inversion: {hname} -> {name} "
+                            f"at {site} conflicts with {name} -> {hname} "
+                            f"at {self._edges[rev]}")
+                self._edges.setdefault(edge, site)
+        held.append([lock, name, 1])
+
+    def on_release(self, lock) -> None:
+        held = self._held()
+        for i in range(len(held) - 1, -1, -1):
+            if held[i][0] is lock:
+                held[i][2] -= 1
+                if held[i][2] == 0:
+                    del held[i]
+                return
+
+    def on_thread_exit(self) -> None:
+        held = self._held()
+        if held:
+            with self._mu:
+                for _l, name, _n in held:
+                    self._reports.append(
+                        f"TSAN thread-exit-holding-lock: "
+                        f"{_real.current_thread().name} exited holding {name}")
+            del held[:]
+
+    # --- Eraser write states (stored on the instance, GC'd with it) ---
+
+    def on_write(self, obj, attr: str, site: str) -> None:
+        if attr == "_tsan_state_":
+            return
+        states = obj.__dict__.get("_tsan_state_")
+        if states is None:
+            states = {}
+            object.__setattr__(obj, "_tsan_state_", states)
+        tid = _real.get_ident()
+        st = states.get(attr)
+        if st is None:
+            states[attr] = {"tid": tid}              # exclusive(first thread)
+            return
+        if "ls" not in st:
+            if st["tid"] == tid:
+                return                               # still exclusive
+            st["ls"] = self.lockset()                # -> shared
+        else:
+            st["ls"] = st["ls"] & self.lockset()
+        if not st["ls"]:
+            key = ("usw", type(obj).__name__, attr)
+            with self._mu:
+                if key not in self._seen:
+                    self._seen.add(key)
+                    self._reports.append(
+                        f"TSAN unlocked-shared-write: "
+                        f"{type(obj).__name__}.{attr} written by "
+                        f"{_real.current_thread().name} with no common lock "
+                        f"at {site}")
+
+    # --- reporting ---
+
+    def report(self) -> List[str]:
+        with self._mu:
+            return list(self._reports)
+
+    def reset(self) -> None:
+        with self._mu:
+            self._edges.clear()
+            self._reports.clear()
+            self._seen.clear()
+
+
+# ------------------------------------------------------------ the wrappers
+
+
+class _TsanLock:
+    """Instrumented mutual-exclusion lock (Lock or RLock inner)."""
+
+    def __init__(self, inner, registry: _Registry, name: str):
+        self._inner = inner
+        self._reg = registry
+        self._name = name
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._reg.on_acquire(self, self._name, _site())
+        return got
+
+    def release(self) -> None:
+        self._reg.on_release(self)
+        self._inner.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self):
+        self._inner.acquire()
+        self._reg.on_acquire(self, self._name, _site())
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class _TsanCondition:
+    """Instrumented Condition. The underlying lock stays 'held' across
+    `wait` in the registry's view — conservative for ordering, exact for
+    write locksets (a waiter is blocked, and `wait_for` predicates run
+    under the re-acquired lock)."""
+
+    def __init__(self, inner, registry: _Registry, name: str):
+        self._inner = inner
+        self._reg = registry
+        self._name = name
+
+    def acquire(self, *a, **kw) -> bool:
+        got = self._inner.acquire(*a, **kw)
+        if got:
+            self._reg.on_acquire(self, self._name, _site())
+        return got
+
+    def release(self) -> None:
+        self._reg.on_release(self)
+        self._inner.release()
+
+    def __enter__(self):
+        self._inner.__enter__()
+        self._reg.on_acquire(self, self._name, _site())
+        return self
+
+    def __exit__(self, *exc):
+        self._reg.on_release(self)
+        return self._inner.__exit__(*exc)
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._inner.wait(timeout)
+
+    def wait_for(self, predicate, timeout: Optional[float] = None):
+        return self._inner.wait_for(predicate, timeout)
+
+    def notify(self, n: int = 1) -> None:
+        self._inner.notify(n)
+
+    def notify_all(self) -> None:
+        self._inner.notify_all()
+
+
+class _Facade:
+    """Drop-in for an instrumented module's `threading` global. Factories
+    return wrappers named by creation site; everything else (Event,
+    current_thread, main_thread, ...) passes through to the real module."""
+
+    def __init__(self, registry: _Registry):
+        self._reg = registry
+
+    def Lock(self):
+        return _TsanLock(_real.Lock(), self._reg, f"Lock@{_site()}")
+
+    def RLock(self):
+        return _TsanLock(_real.RLock(), self._reg, f"RLock@{_site()}")
+
+    def Condition(self, lock=None):
+        inner = _real.Condition(getattr(lock, "_inner", lock))
+        return _TsanCondition(inner, self._reg, f"Condition@{_site()}")
+
+    def Thread(self, *args, **kwargs):
+        target = kwargs.get("target")
+        if target is not None:
+            reg = self._reg
+
+            @functools.wraps(target)
+            def run(*a, **kw):
+                try:
+                    return target(*a, **kw)
+                finally:
+                    reg.on_thread_exit()
+
+            kwargs = dict(kwargs, target=run)
+        return _real.Thread(*args, **kwargs)
+
+    def __getattr__(self, name):
+        return getattr(_real, name)
+
+
+# ----------------------------------------------------------- install / report
+
+
+_installed: Optional[dict] = None
+_registry = _Registry()
+
+
+def instrument_class(cls) -> None:
+    """Route `cls` attribute writes through the Eraser write tracker.
+    Used by `install()` on the repo's concurrent classes; also the unit-test
+    entry point for racy fixture classes."""
+    if getattr(cls, "_tsan_instrumented_", False):
+        return
+    orig = cls.__setattr__
+
+    def __setattr__(self, name, value):
+        _registry.on_write(self, name, _site())
+        orig(self, name, value)
+
+    cls._tsan_orig_setattr_ = orig
+    cls.__setattr__ = __setattr__
+    cls._tsan_instrumented_ = True
+
+
+def uninstrument_class(cls) -> None:
+    if getattr(cls, "_tsan_instrumented_", False):
+        cls.__setattr__ = cls._tsan_orig_setattr_
+        del cls._tsan_orig_setattr_
+        cls._tsan_instrumented_ = False
+
+
+def install() -> None:
+    """Patch the instrumented modules' `threading` binding and class
+    `__setattr__`s. Idempotent; must run before the objects under test are
+    constructed (the pytest session fixture and CLI entry points do)."""
+    global _installed
+    if _installed is not None:
+        return
+    import importlib
+
+    facade = _Facade(_registry)
+    saved = {}
+    for modname, classnames in INSTRUMENTED.items():
+        mod = importlib.import_module(modname)
+        saved[modname] = mod.threading
+        mod.threading = facade
+        for cn in classnames:
+            instrument_class(getattr(mod, cn))
+    _installed = saved
+    atexit.register(_atexit_report)
+
+
+def uninstall() -> None:
+    global _installed
+    if _installed is None:
+        return
+    import importlib
+
+    for modname, orig in _installed.items():
+        mod = importlib.import_module(modname)
+        mod.threading = orig
+        for cn in INSTRUMENTED[modname]:
+            uninstrument_class(getattr(mod, cn))
+    _installed = None
+
+
+def report() -> List[str]:
+    """The findings recorded so far (empty == clean)."""
+    return _registry.report()
+
+
+def reset() -> None:
+    _registry.reset()
+
+
+def _atexit_report() -> None:
+    findings = _registry.report()
+    if findings:
+        print("\n".join(findings), file=sys.stderr)
+        print(f"REPRO_TSAN: {len(findings)} finding(s)", file=sys.stderr)
+
+
+def maybe_install() -> bool:
+    """`install()` iff REPRO_TSAN=1; returns whether the sanitizer is on.
+    The one-liner for entry points: `sanitize.maybe_install()`."""
+    if enabled():
+        install()
+        return True
+    return False

@@ -4,6 +4,7 @@ from repro.checkpoint.npz import (  # noqa: F401
     latest_step,
     read_manifest,
     restore,
+    restore_latest,
     save,
 )
 from repro.checkpoint.state import (  # noqa: F401

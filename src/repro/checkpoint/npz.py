@@ -88,6 +88,36 @@ def latest_step(ckpt_dir: str):
         return int(f.read().strip())
 
 
+def restore_latest(ckpt_dir: str, tree_like, shardings=None, attempts: int = 8):
+    """Restore the newest snapshot, racing safely against retention.
+
+    The writer's retention pass updates MANIFEST.json *before* unlinking a
+    pruned archive, so a reader can never be pointed at a file that is about
+    to disappear — but a reader that loaded the manifest just *before* the
+    update can still lose the race: its (stale) latest step gets pruned
+    between `latest_step` and `np.load`. The fix is reader-side: on
+    FileNotFoundError, re-read the manifest (which by then names a newer,
+    retained step) and retry. Returns `(step, tree)`; raises
+    FileNotFoundError only when the dir has no checkpoints at all or a step
+    keeps vanishing `attempts` times (a broken dir, not a race).
+    """
+    last = None
+    for _ in range(attempts):
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+        try:
+            return step, restore(ckpt_dir, step, tree_like, shardings=shardings)
+        except FileNotFoundError as e:
+            # step was pruned under us; the next manifest read sees its
+            # replacement (manifest-before-unlink ordering in the writer)
+            last = e
+    raise FileNotFoundError(
+        f"checkpoint archives in {ckpt_dir} kept vanishing across "
+        f"{attempts} manifest reads (last: {last}); the dir is being "
+        f"deleted, not just pruned")
+
+
 def _mismatch_error(path: str, missing, unexpected, n_template: int, n_archive: int):
     def fmt(keys):
         keys = sorted(keys)

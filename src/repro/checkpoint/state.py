@@ -97,14 +97,30 @@ def dist_snapshot(W, version: int, staleness) -> dict:
 
 
 def dist_restore(ckpt_dir: str, step: int = None) -> dict:
-    """Load a chief snapshot: {"W", "version", "staleness"} as numpy arrays."""
+    """Load a chief snapshot: {"W", "version", "staleness"} as numpy arrays.
+
+    With step=None this retries the manifest read when the step it named was
+    pruned between read and load (the retention race `restore_latest` closes
+    for mesh snapshots; same reader-side discipline here)."""
     from repro.checkpoint.npz import latest_step
 
     if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    data = np.load(step_path(ckpt_dir, step))
+        data = None
+        for _ in range(8):
+            step = latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+            try:
+                data = np.load(step_path(ckpt_dir, step))
+                break
+            except FileNotFoundError:
+                continue  # pruned under us; manifest now names a newer step
+        if data is None:
+            raise FileNotFoundError(
+                f"chief snapshots in {ckpt_dir} kept vanishing across 8 "
+                f"manifest reads; the dir is being deleted, not just pruned")
+    else:
+        data = np.load(step_path(ckpt_dir, step))
     out = {}
     for key in data.files:
         # keys look like ['dist']/['W']; strip the path syntax

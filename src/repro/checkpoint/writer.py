@@ -110,6 +110,7 @@ class AsyncCheckpointer:
         self.meta = dict(meta or {})
         os.makedirs(ckpt_dir, exist_ok=True)
         self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._lock = threading.Lock()   # guards _err and _last_step
         self._err: BaseException | None = None
         self._last_step: int | None = None
         self._thread = threading.Thread(target=self._worker, daemon=True,
@@ -123,10 +124,11 @@ class AsyncCheckpointer:
         thread, step boundary); serialization happens on the writer thread.
         Returns False when deduped (same step as the previous save)."""
         self._raise_pending()
-        if step == self._last_step:
-            return False
+        with self._lock:
+            if step == self._last_step:
+                return False
+            self._last_step = step
         flat = _flatten(tree)  # np.asarray per leaf: sync + copy off device
-        self._last_step = step
         self._q.put((step, flat))
         if block:
             self.wait()
@@ -145,8 +147,9 @@ class AsyncCheckpointer:
         self._raise_pending()
 
     def _raise_pending(self):
-        if self._err is not None:
+        with self._lock:
             err, self._err = self._err, None
+        if err is not None:
             raise RuntimeError(
                 f"checkpoint writer failed for {self.ckpt_dir}") from err
 
@@ -163,6 +166,7 @@ class AsyncCheckpointer:
                 _update_manifest(self.ckpt_dir, step, os.path.basename(path),
                                  self.meta, self.keep_last)
             except BaseException as e:  # surfaced on the caller's next call
-                self._err = e
+                with self._lock:
+                    self._err = e
             finally:
                 self._q.task_done()

@@ -104,6 +104,7 @@ class ChunkPrefetcher:
         self._put = put
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
+        self._lock = threading.Lock()   # guards _err (worker writes, consumer reads)
         self._err: Optional[BaseException] = None
         self._thread = threading.Thread(
             target=self._work, args=(iter(source),),
@@ -120,7 +121,8 @@ class ChunkPrefetcher:
                     break
                 self._offer(self._put(item))
         except BaseException as e:  # surfaced from __next__, not swallowed
-            self._err = e
+            with self._lock:
+                self._err = e
         self._offer(self._DONE)
 
     def _offer(self, item) -> None:
@@ -148,11 +150,16 @@ class ChunkPrefetcher:
                     item = self._DONE
                     break
         if item is self._DONE:
-            if self._err is not None:
-                err, self._err = self._err, None
+            err = self._take_err()
+            if err is not None:
                 raise err
             raise StopIteration
         return item
+
+    def _take_err(self) -> Optional[BaseException]:
+        with self._lock:
+            err, self._err = self._err, None
+            return err
 
     def close(self) -> None:
         """Stop the worker and join it; pending staged items are dropped."""

@@ -31,7 +31,7 @@ class Chief:
         self.address = self.listener.address
         self._threads: list = []
         self._next_wid = int(meta.get("n_workers", 0))
-        self._wid_lock = threading.Lock()
+        self._lock = threading.Lock()   # guards _next_wid and _threads
         self._stop = threading.Event()
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="dist-chief-accept", daemon=True)
@@ -51,7 +51,8 @@ class Chief:
             t = threading.Thread(target=self._serve, args=(conn,),
                                  name="dist-chief-conn", daemon=True)
             t.start()
-            self._threads.append(t)
+            with self._lock:
+                self._threads.append(t)
 
     def close(self):
         self._stop.set()
@@ -67,17 +68,19 @@ class Chief:
         except OSError:
             pass
         self._accept_thread.join(timeout=5.0)
-        for t in self._threads:
+        with self._lock:
+            threads = list(self._threads)
+        for t in threads:     # join outside the lock: _serve threads take it
             t.join(timeout=5.0)
 
     def _assign_wid(self, requested):
         if requested is not None:
             return int(requested)
-        with self._wid_lock:
+        with self._lock:
             wid = self._next_wid
             self._next_wid += 1
-            self.store.joins += 1
-            return wid
+        self.store.record_join()  # outside _lock: never nest it with cond
+        return wid
 
     # --------------------------------------------------------------- serving
 
@@ -114,9 +117,7 @@ class Chief:
                     raise ValueError(f"unknown verb {verb!r} from worker {wid}")
         except (EOFError, ConnectionResetError, BrokenPipeError, OSError):
             # worker died mid-stream (kill/crash): tolerated, counted
-            with store.cond:
-                store.worker_exits += 1
-                store.cond.notify_all()
+            store.record_worker_exit()
         finally:
             try:
                 conn.close()

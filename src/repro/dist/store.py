@@ -276,6 +276,20 @@ class ParameterStore:
                 return None
             return self.W, self.version
 
+    # --------------------------------------------------------- worker counts
+
+    def record_join(self):
+        """An elastic worker joined (chief assigned it a fresh wid)."""
+        with self.cond:
+            self.joins += 1
+
+    def record_worker_exit(self):
+        """A worker connection died mid-stream (kill/crash): tolerated,
+        counted, and waiters are woken so replay grants can re-examine."""
+        with self.cond:
+            self.worker_exits += 1
+            self.cond.notify_all()
+
     # -------------------------------------------------------------- queries
 
     def done(self) -> bool:

@@ -196,16 +196,17 @@ def fit(spec: ExperimentSpec, strategy, data=None, steps: Optional[int] = None,
         if not spec.ckpt_dir:
             raise ValueError("fit(resume=True) needs spec.ckpt_dir to know "
                              "where the snapshots live")
-        latest = C.latest_step(spec.ckpt_dir)
-        if latest is not None:
+        if C.latest_step(spec.ckpt_dir) is not None:
             # the freshly initialized state is the restore template: same
             # treedef (incl. strategy extra / w_stale presence), so a
             # checkpoint from a different config fails loudly, not subtly
             template = C.snapshot(params, gstate, 0)
             shardings = (C.train_state_shardings(ctx, logical, params, gstate)
                          if ctx.distributed else None)
-            snap = C.restore_train_state(spec.ckpt_dir, latest, template,
-                                         shardings=shardings)
+            # restore_latest re-reads the manifest if retention prunes the
+            # step it named between manifest read and archive load
+            _, snap = C.restore_latest(spec.ckpt_dir, template,
+                                       shardings=shardings)
             params, gstate = snap["params"], snap["gstate"]
             if shardings is None:
                 # commit host arrays to device so donation keeps working

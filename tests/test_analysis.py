@@ -606,3 +606,187 @@ def test_chunked_dispatch_traces_once_per_shape():
             params, gstate, m = dispatch(params, gstate, block)
     with assert_traces(1, dispatch):  # the (2, 8) tail compiles once more
         params, gstate, m = dispatch(params, gstate, jnp.ones((2, 8)))
+
+
+# ------------------------------------------------- lockset pass (DESIGN §13)
+
+
+def locks(src, path="src/repro/x.py"):
+    from repro.analysis.locks import analyze_source
+
+    return analyze_source(textwrap.dedent(src), path)
+
+
+class TestLocksPass:
+    def test_unlocked_shared_write_flagged(self):
+        findings, models = locks("""
+        import threading
+
+        class Buf:
+            def __init__(self):
+                self.lock = threading.Lock()
+                self.items = []
+                self.n = 0
+                threading.Thread(target=self._work).start()
+
+            def _work(self):
+                self.items.append(1)   # worker thread, no lock
+
+            def take(self):
+                with self.lock:
+                    return self.items.pop()
+        """)
+        assert [m.name for m in models] == ["Buf"]
+        hits = rules_of(findings, "lock-shared-unlocked")
+        assert len(hits) == 1
+        assert "Buf.items" in hits[0].message and "_work" in hits[0].message
+
+    def test_inconsistent_locks_flagged(self):
+        findings, _ = locks("""
+        import threading
+
+        class Split:
+            def __init__(self):
+                self.a = threading.Lock()
+                self.b = threading.Lock()
+                self.n = 0
+                threading.Thread(target=self.grow).start()
+
+            def grow(self):
+                with self.a:
+                    self.n += 1
+
+            def read(self):
+                with self.b:
+                    return self.n
+        """)
+        hits = rules_of(findings, "lock-inconsistent")
+        assert len(hits) == 1
+        assert "no common member" in hits[0].message
+
+    def test_lock_order_cycle_flagged(self):
+        findings, _ = locks("""
+        import threading
+
+        class AB:
+            def __init__(self):
+                self.a = threading.Lock()
+                self.b = threading.Lock()
+                threading.Thread(target=self.fwd).start()
+
+            def fwd(self):
+                with self.a:
+                    with self.b:
+                        pass
+
+            def rev(self):
+                with self.b:
+                    with self.a:
+                        pass
+        """)
+        hits = rules_of(findings, "lock-order-cycle")
+        assert len(hits) == 1
+        assert "AB.a" in hits[0].message and "AB.b" in hits[0].message
+
+    def test_disciplined_class_clean(self):
+        findings, models = locks("""
+        import threading
+
+        class Clean:
+            def __init__(self):
+                self.cond = threading.Condition()
+                self.n = 0
+                threading.Thread(target=self._work).start()
+
+            def _work(self):
+                with self.cond:
+                    self.n += 1
+                    self.cond.notify_all()
+
+            def wait_done(self):
+                with self.cond:
+                    self.cond.wait_for(lambda: self.n > 0)
+                    return self.n
+        """)
+        assert findings == []
+        assert models[0].lock_attrs == {"cond"}
+
+    def test_helper_inherits_callers_lock(self):
+        # _bump is only ever called with the lock held: entry-lockset
+        # propagation proves the unlocked-looking write safe
+        findings, _ = locks("""
+        import threading
+
+        class Via:
+            def __init__(self):
+                self.lock = threading.Lock()
+                self.n = 0
+                threading.Thread(target=self.work).start()
+
+            def work(self):
+                with self.lock:
+                    self._bump()
+
+            def _bump(self):
+                self.n += 1
+        """)
+        assert findings == []
+
+    def test_single_threaded_class_ignored(self):
+        _, models = locks("""
+        class Plain:
+            def __init__(self):
+                self.n = 0
+
+            def bump(self):
+                self.n += 1
+        """)
+        assert models == []
+
+    def test_real_tree_is_clean(self):
+        from repro.analysis.locks import run_locks
+
+        findings, models = run_locks([SRC])
+        assert findings == [], [f.format() for f in findings]
+        # the four concurrent classes the repo actually has are discovered
+        names = {m.name for m in models}
+        assert {"ParameterStore", "Chief", "ChunkPrefetcher",
+                "AsyncCheckpointer"} <= names
+
+    def test_cross_class_order_is_acyclic_on_real_tree(self):
+        from repro.analysis.locks import find_cycles, lock_order_graph, run_locks
+
+        _, models = run_locks([SRC])
+        assert find_cycles(lock_order_graph(models)) == []
+
+
+class TestLockNotWithRule:
+    PATH = "src/repro/data/prefetch.py"
+
+    def test_bare_acquire_release_flagged(self):
+        src = """
+        class P:
+            def step(self):
+                self.lock.acquire()
+                self.n += 1
+                self.lock.release()
+        """
+        hits = rules_of(lint(src, self.PATH), "lock-not-with")
+        assert len(hits) == 2
+
+    def test_with_statement_clean(self):
+        src = """
+        class P:
+            def step(self):
+                with self.lock:
+                    self.n += 1
+        """
+        assert rules_of(lint(src, self.PATH), "lock-not-with") == []
+
+    def test_inline_allow(self):
+        src = """
+        class P:
+            def step(self):
+                self.lock.acquire()  # lint: allow[lock-not-with] handoff
+        """
+        assert rules_of(lint(src, self.PATH), "lock-not-with") == []

@@ -179,3 +179,126 @@ def test_latest_step_falls_back_to_v1_latest(tmp_path):
     save(d, 11, {"w": jnp.zeros(2)})  # v1 API: writes LATEST, no manifest
     assert read_manifest(d) is None
     assert latest_step(d) == 11
+
+
+# --------------------------------------- restore-during-retention (DESIGN §13)
+
+
+def test_manifest_never_names_a_pruned_archive(tmp_path):
+    """The writer-side half of the retention race fix: at EVERY point in a
+    long retention run, each step the manifest lists has its archive on disk
+    (manifest update strictly before unlink)."""
+    d = str(tmp_path)
+    for s in range(1, 12):
+        save_train_state(d, s, _tree(s), keep_last=2)
+        for c in read_manifest(d)["ckpts"]:
+            assert os.path.exists(os.path.join(d, c["file"])), (
+                f"manifest names pruned archive {c['file']} after step {s}")
+
+
+def test_restore_latest_retries_a_pruned_step(tmp_path, monkeypatch):
+    """The reader-side half: a manifest read that went stale (its step pruned
+    before the load) retries against the fresh manifest instead of failing."""
+    import repro.checkpoint.npz as N
+    from repro.checkpoint import restore_latest
+
+    d = str(tmp_path)
+    save_train_state(d, 1, _tree(1), keep_last=2)
+    save_train_state(d, 2, _tree(2), keep_last=2)
+
+    real = N.latest_step
+    calls = {"n": 0}
+
+    def racing_latest_step(ckpt_dir):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            # simulate: we read latest=2, then retention pruned it
+            step = real(ckpt_dir)
+            save_train_state(ckpt_dir, 3, _tree(3), keep_last=1)
+            return step
+        return real(ckpt_dir)
+
+    monkeypatch.setattr(N, "latest_step", racing_latest_step)
+    step, out = restore_latest(d, _tree(0))
+    assert step == 3 and calls["n"] == 2
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]), 3.0)
+
+
+def test_restore_latest_gives_up_on_a_vanishing_dir(tmp_path, monkeypatch):
+    import repro.checkpoint.npz as N
+    from repro.checkpoint import restore_latest
+
+    d = str(tmp_path)
+    save_train_state(d, 1, _tree(1))
+    os.unlink(os.path.join(d, "step_00000001.npz"))  # manifest now dangles
+    with pytest.raises(FileNotFoundError, match="kept vanishing"):
+        restore_latest(d, _tree(0), attempts=3)
+    with pytest.raises(FileNotFoundError, match="no checkpoints"):
+        restore_latest(str(tmp_path / "empty"), _tree(0))
+
+
+def test_restore_races_live_retention(tmp_path):
+    """Concurrent stress: a writer cycling keep_last=2 snapshots while a
+    reader restore_latest()s in a loop — every restore must succeed and
+    return an internally consistent snapshot (w matches its step)."""
+    import threading
+
+    d = str(tmp_path)
+    save_train_state(d, 0, _tree(0), keep_last=2)
+    stop = threading.Event()
+    errs = []
+
+    def writer():
+        ck = AsyncCheckpointer(d, keep_last=2)
+        try:
+            for s in range(1, 60):
+                ck.save(s, _tree(s))
+        finally:
+            ck.close()
+        stop.set()
+
+    def reader():
+        from repro.checkpoint import restore_latest
+
+        try:
+            while not stop.is_set():
+                step, out = restore_latest(d, _tree(0))
+                w = np.asarray(out["params"]["w"])
+                if not (w == float(step)).all():
+                    errs.append(f"step {step} restored w={w[0]}")
+        except BaseException as e:  # surfaced below, not swallowed
+            errs.append(repr(e))
+
+    threads = [threading.Thread(target=writer),
+               threading.Thread(target=reader)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60.0)
+        assert not t.is_alive()
+    assert errs == []
+
+
+def test_dist_restore_retries_latest_like_restore_latest(tmp_path, monkeypatch):
+    import repro.checkpoint.npz as N
+    from repro.checkpoint import dist_restore, dist_snapshot
+
+    d = str(tmp_path)
+    save_train_state(d, 1, dist_snapshot([1.0], 1, [0]), keep_last=2)
+    save_train_state(d, 2, dist_snapshot([2.0], 2, [0, 1]), keep_last=2)
+
+    real = N.latest_step
+    calls = {"n": 0}
+
+    def racing_latest_step(ckpt_dir):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            step = real(ckpt_dir)
+            save_train_state(ckpt_dir, 3, dist_snapshot([3.0], 3, [0, 1, 1]),
+                             keep_last=1)
+            return step
+        return real(ckpt_dir)
+
+    monkeypatch.setattr(N, "latest_step", racing_latest_step)
+    out = dist_restore(d)
+    assert int(out["version"]) == 3 and calls["n"] == 2

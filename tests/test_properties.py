@@ -126,3 +126,81 @@ def test_microbatch_split_partitions_batch(c):
     # each microbatch holds an equal share of each worker's rows
     per_worker = np.asarray(mbs[0])[:, 0].reshape(c, -1)
     assert per_worker.shape[1] == 2
+
+
+# ------------------------------------------------- dist protocol (DESIGN §13)
+
+from repro.analysis import LIVE_FSM, REPLAY_FSM, check_sequence
+
+_ALPHABET = sorted({v for fsm in (REPLAY_FSM, LIVE_FSM) for _s, v in fsm})
+
+
+def _legal_trace(rng, mode, cap=40):
+    """Random walk over the mode's FSM from init to closed: legal by
+    construction. Past `cap` verbs the walk prefers the draining branch so
+    it always terminates."""
+    fsm = REPLAY_FSM if mode == "replay" else LIVE_FSM
+    state, verbs = "init", []
+    while state != "closed":
+        allowed = sorted(v for (s, v) in fsm if s == state)
+        if len(verbs) >= cap and "done" in allowed:
+            verb = "done"
+        else:
+            verb = allowed[rng.integers(len(allowed))]
+        verbs.append(verb)
+        state = fsm[(state, verb)]
+    return verbs
+
+
+def _mutate_one_verb(rng, verbs, mode):
+    """Replace verbs[i] with a verb illegal in the state reached at i.
+    Returns (mutated, i, bad_verb)."""
+    fsm = REPLAY_FSM if mode == "replay" else LIVE_FSM
+    i = int(rng.integers(len(verbs)))
+    state = "init"
+    for v in verbs[:i]:
+        state = fsm[(state, v)]
+    illegal = [v for v in _ALPHABET if (state, v) not in fsm]
+    bad = illegal[rng.integers(len(illegal))]
+    return verbs[:i] + [bad] + verbs[i + 1:], i, bad
+
+
+@given(st.integers(0, 10**6), st.sampled_from(["replay", "live"]))
+@settings(max_examples=60, deadline=None)
+def test_generated_legal_traces_always_pass(seed, mode):
+    rng = np.random.default_rng(seed)
+    assert check_sequence(_legal_trace(rng, mode), mode) == []
+
+
+@given(st.integers(0, 10**6), st.sampled_from(["replay", "live"]))
+@settings(max_examples=60, deadline=None)
+def test_single_verb_mutation_is_rejected_at_its_index(seed, mode):
+    rng = np.random.default_rng(seed)
+    trace = _legal_trace(rng, mode)
+    mutated, i, bad = _mutate_one_verb(rng, trace, mode)
+    viol = check_sequence(mutated, mode, require_closed=False)
+    assert viol, f"mutation {bad!r}@{i} not rejected: {mutated}"
+    assert viol[0].index == i and viol[0].verb == bad
+
+
+# seeded twins: the same properties on a fixed sweep, so the contract stays
+# exercised when hypothesis is absent (it is not on the image)
+
+
+@pytest.mark.parametrize("mode", ["replay", "live"])
+def test_seeded_legal_traces_always_pass(mode):
+    for seed in range(50):
+        rng = np.random.default_rng(seed)
+        trace = _legal_trace(rng, mode)
+        assert check_sequence(trace, mode) == [], (seed, trace)
+
+
+@pytest.mark.parametrize("mode", ["replay", "live"])
+def test_seeded_single_verb_mutations_rejected(mode):
+    for seed in range(50):
+        rng = np.random.default_rng(seed)
+        trace = _legal_trace(rng, mode)
+        mutated, i, bad = _mutate_one_verb(rng, trace, mode)
+        viol = check_sequence(mutated, mode, require_closed=False)
+        assert viol and viol[0].index == i and viol[0].verb == bad, (
+            seed, mode, i, bad, mutated)

@@ -315,6 +315,63 @@ def test_prefetcher_close_mid_stream_unblocks_worker():
     assert threading.active_count() == 1
 
 
+def test_prefetcher_worker_death_propagates_transfer_errors():
+    """The device-put can die too (OOM, bad dtype), not just the source
+    generator: the consumer must see that error, never a silent hang."""
+    from repro.data.prefetch import ChunkPrefetcher
+
+    def put(tree):
+        if int(tree["x"][0]) == 2:
+            raise ValueError("transfer exploded")
+        return tree
+
+    src = [{"x": np.full((1,), i)} for i in range(5)]
+    pf = ChunkPrefetcher(iter(src), put=put)
+    assert [int(next(pf)["x"][0]) for _ in range(2)] == [0, 1]
+    with pytest.raises(ValueError, match="transfer exploded"):
+        for _ in range(3):
+            next(pf)
+    pf.close()
+    assert threading.active_count() == 1
+
+
+def test_prefetcher_worker_death_drains_staged_items_first():
+    """Items committed before the death still arrive, in order — the error
+    surfaces exactly where the stream broke, not earlier."""
+    from repro.data.prefetch import ChunkPrefetcher
+
+    def dying():
+        for i in range(3):
+            yield {"x": np.full((1,), i)}
+        raise OSError("source died")
+
+    pf = ChunkPrefetcher(dying(), put=lambda t: t, depth=2)
+    assert [int(next(pf)["x"][0]) for _ in range(3)] == [0, 1, 2]
+    with pytest.raises(OSError, match="source died"):
+        next(pf)
+    # the error is consumed: the stream is over, not stuck raising forever
+    with pytest.raises(StopIteration):
+        next(pf)
+    pf.close()
+    assert threading.active_count() == 1
+
+
+def test_prefetcher_worker_death_does_not_hang_consumer():
+    """A consumer polling a dead worker gets end-of-stream promptly (the
+    is_alive fallback), bounded well under the watchdog horizon."""
+    import time
+
+    from repro.data.prefetch import ChunkPrefetcher
+
+    pf = ChunkPrefetcher(iter(()), put=lambda t: t)
+    pf._thread.join(timeout=10.0)
+    t0 = time.monotonic()
+    with pytest.raises(StopIteration):
+        next(pf)
+    assert time.monotonic() - t0 < 5.0
+    pf.close()
+
+
 def test_batch_put_local_matches_asarray():
     from repro.data.prefetch import batch_put
     from repro.sharding.rules import LOCAL_CTX
