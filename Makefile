@@ -2,7 +2,7 @@
 
 PY := PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast bench quickstart lint locks modelcheck check
+.PHONY: test test-fast bench quickstart lint locks modelcheck check chaos
 
 test:            ## tier-1: full suite, fail fast
 	$(PY) -m pytest -x -q
@@ -17,6 +17,9 @@ modelcheck:      ## explore dist-protocol interleavings + seeded-bug selfcheck (
 	$(PY) -m repro.analysis.modelcheck
 
 check: lint modelcheck  ## every static/model gate CI runs, in one target
+
+chaos:           ## seeded fault injection: every ChaosPlan must self-heal (DESIGN.md §14)
+	$(PY) -m pytest -q tests/test_chaos.py tests/test_resilience.py
 
 test-fast:       ## skip the multi-minute @slow tests
 	$(PY) -m pytest -x -q -m "not slow"

@@ -1,13 +1,17 @@
 """Async parameter server (backend="dist") vs the chunked-lockstep scan sim.
 
-Three configurations on the same pima workload, same rho/lr/seed:
+Four configurations on the same pima workload, same rho/lr/seed:
   scan        — the jitted single-process delay SIMULATOR (the reference the
                 dist replay mode reproduces bit-for-bit; here run as the
                 throughput baseline),
   dist_async  — free-running live mode: real worker processes pushing as fast
                 as they compute, staleness OBSERVED not sampled,
   dist_davg   — DaSGD-style delayed averaging: push/pull overlapped with the
-                next local gradient, so observed staleness shifts right.
+                next local gradient, so observed staleness shifts right,
+  dist_heal   — dist_async with worker 0 SIGKILLed mid-run: the supervisor
+                (repro.resilience, DESIGN.md §14) respawns it and the run
+                completes its full budget; reports RECOVERY TIME TO HEALTHY
+                (death detected -> respawned worker observed alive again).
 
 Reported per config: wall seconds, server steps/s, final val loss, and the
 observed staleness histogram + mean (scan reports the SCHEDULED histogram —
@@ -66,6 +70,23 @@ def run(epochs: int = 6, workers: int = 2, dataset: str = "pima",
                      "staleness": _hist_stats(rep.staleness_hist),
                      "observed": True, "dist": rep.dist}
 
+    # dist_heal: the recovery-time bench — same async config with worker 0
+    # SIGKILLed mid-run (half the step budget, so the respawned worker has
+    # budget left to prove itself on); dist_time_scale paces compute so the
+    # kill version cannot race past the monitor's poll window
+    kill_at = max(1, out["scan"]["n_steps"] // 2)
+    spec = ExperimentSpec(backend="dist", dist_mode="live", workers=workers,
+                          dist_timeout=120.0, dist_time_scale=0.002,
+                          dist_events=(("kill", 0, kill_at),), **common)
+    rep = Trainer.from_spec(spec).fit(data)
+    sup = rep.dist.get("supervisor", {})
+    recoveries = sup.get("recoveries", [])
+    out["dist_heal"] = {"wall_s": rep.wall_time_s, "n_steps": rep.n_steps,
+                        "val_loss": rep.val_loss, "kill_at_version": kill_at,
+                        "worker_exits": rep.dist.get("worker_exits", 0),
+                        "supervisor": sup,
+                        "recovery_s": recoveries[0][1] if recoveries else None}
+
     out["headline"] = {
         "async_vs_scan_val_loss_delta": out["dist_async"]["val_loss"] - out["scan"]["val_loss"],
         "davg_vs_scan_val_loss_delta": out["dist_davg"]["val_loss"] - out["scan"]["val_loss"],
@@ -73,6 +94,7 @@ def run(epochs: int = 6, workers: int = 2, dataset: str = "pima",
         "scan_steps_per_s": out["scan"]["steps_per_s"],
         "async_mean_staleness": out["dist_async"]["staleness"]["mean"],
         "davg_mean_staleness": out["dist_davg"]["staleness"]["mean"],
+        "kill_recovery_s": out["dist_heal"]["recovery_s"],
     }
     if verbose:
         for name in ("scan", "dist_async", "dist_davg"):
@@ -81,6 +103,11 @@ def run(epochs: int = 6, workers: int = 2, dataset: str = "pima",
             print(f"{name:11s} steps={r['n_steps']:4d} wall={r['wall_s']:6.2f}s "
                   f"steps/s={r['steps_per_s']:8.1f} val={r['val_loss']:.4f} "
                   f"{kind} staleness mean={r['staleness']['mean']:.2f}")
+        h = out["dist_heal"]
+        rec = f"{h['recovery_s']:.3f}s" if h["recovery_s"] is not None else "n/a"
+        print(f"{'dist_heal':11s} steps={h['n_steps']:4d} wall={h['wall_s']:6.2f}s "
+              f"kill@v{h['kill_at_version']} exits={h['worker_exits']} "
+              f"respawns={h['supervisor'].get('respawns', 0)} recovery={rec}")
     return out
 
 

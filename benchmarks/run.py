@@ -316,8 +316,9 @@ def bench_ckpt(full: bool, out_path: str = "BENCH_ckpt.json"):
 def bench_dist(full: bool, out_path: str = "BENCH_dist.json"):
     """Real async parameter server vs the chunked-lockstep scan sim
     (benchmarks/dist_bench.py). Headline: async/delayed-avg final val loss
-    deltas vs scan + observed-staleness means. Dist steps/s pays real process
-    spawn + socket RTTs at toy scale — a floor, not a ceiling."""
+    deltas vs scan + observed-staleness means + the supervisor's recovery
+    time-to-healthy after a mid-run worker SIGKILL. Dist steps/s pays real
+    process spawn + socket RTTs at toy scale — a floor, not a ceiling."""
     import json
 
     from benchmarks.dist_bench import run
@@ -327,13 +328,15 @@ def bench_dist(full: bool, out_path: str = "BENCH_dist.json"):
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1, default=float)
     h = out["headline"]
+    rec = h.get("kill_recovery_s")
     print(f"dist_async_vs_scan,{us:.0f},"
           f"async_dloss={h['async_vs_scan_val_loss_delta']:+.4f};"
           f"davg_dloss={h['davg_vs_scan_val_loss_delta']:+.4f};"
           f"async_steps_s={h['async_steps_per_s']:.1f};"
           f"scan_steps_s={h['scan_steps_per_s']:.1f};"
           f"async_stale={h['async_mean_staleness']:.2f};"
-          f"davg_stale={h['davg_mean_staleness']:.2f}")
+          f"davg_stale={h['davg_mean_staleness']:.2f};"
+          f"kill_recovery_s={rec if rec is None else format(rec, '.3f')}")
     return out
 
 

@@ -37,10 +37,23 @@ how to add one):
                          `protocol.check_sequence` (closed connections
                          must reach `bye`; killed ones must be legal
                          prefixes)
+  rollback-bounded       recovery: divergence rollbacks never exceed
+                         `max_rollbacks` without the run going fatal —
+                         remediation must not loop forever
+  respawn-capped         recovery: a supervised worker is respawned at
+                         most `max_respawns` times, then evicted — no
+                         zombie respawn loops
+
+The `RecoveryModel` (DESIGN.md §14) extends the live discipline with the
+self-healing layer's semantics: sentinel-rejected pushes (a bad worker's
+gradients never bump the version — the exactly-once/monotone core of the
+rollback design), consecutive-rejection quarantine, bounded divergence
+rollbacks, and capped supervisor respawns.
 
 Every invariant has at least one seeded-bug fixture (`BUGS`) proving the
 harness would catch its violation: nonmonotone, double-apply,
-staleness-skew, grant-early, lost-wakeup, ghost-done, wrong-verb.
+staleness-skew, grant-early, lost-wakeup, ghost-done, wrong-verb,
+reject-bumps-version, rollback-unbounded, zombie-respawn.
 
 CLI: `python -m repro.analysis.modelcheck` explores the stock config suite
 (>= 10k interleavings at 2 workers, depth-bounded), then proves each
@@ -490,6 +503,200 @@ class LiveModel:
         return None    # all dead: the watchdog fires; a legal termination
 
 
+# ------------------------------------------------------------ recovery model
+
+# recovery worker tuple: (phase, read_v, consecutive_rejections)
+
+
+class RecoveryModel:
+    """The self-healing extension of the live discipline (DESIGN.md §14).
+
+    `bad` workers push non-finite gradients: the sentinel REJECTS those
+    pushes — counted, never applied, version untouched — and quarantines a
+    worker after `quarantine_after` consecutive rejections (modeled as the
+    worker draining out). `diverge_at` version thresholds fire divergence
+    events: each costs one rollback; exceeding `max_rollbacks` must flip the
+    run fatal (everything drains) instead of remediating forever. Dead
+    workers (kill events) are respawned by the supervisor at most
+    `max_respawns` times, then evicted.
+
+    Seeded bugs: "reject-bumps-version" (a rejected push still advances the
+    version), "rollback-unbounded" (divergence never goes fatal),
+    "zombie-respawn" (eviction ignores the respawn cap).
+    """
+
+    mode = "live"
+
+    def __init__(self, total: int, n_workers: int = 2, bad: Sequence[int] = (),
+                 quarantine_after: int = 2, max_rollbacks: int = 1,
+                 max_respawns: int = 1,
+                 events: Sequence[Tuple[str, int, int]] = (),
+                 diverge_at: Sequence[int] = (), bug: Optional[str] = None):
+        self.total = int(total)
+        self.n_workers = n_workers
+        self.bad = frozenset(bad)
+        self.quarantine_after = int(quarantine_after)
+        self.max_rollbacks = int(max_rollbacks)
+        self.max_respawns = int(max_respawns)
+        self.events = tuple(events)          # ("kill", wid, at_version)
+        self.diverge_at = tuple(diverge_at)  # version thresholds, fire once
+        self.bug = bug
+
+    # state: (version, applies, rejected, rollbacks, fatal,
+    #         fired, dfired, workers, respawns)
+
+    def initial(self):
+        workers = tuple((_FRESH, -1, 0) for _ in range(self.n_workers))
+        return (0, 0, 0, 0, False,
+                (False,) * len(self.events), (False,) * len(self.diverge_at),
+                workers, (0,) * self.n_workers)
+
+    def _done(self, version: int, fatal: bool) -> bool:
+        return fatal or version >= self.total
+
+    def actions(self, state) -> List[Action]:
+        version, _ap, _rej, _rb, fatal, fired, dfired, workers, respawns = state
+        acts: List[Action] = []
+        for wid, (phase, _rv, _consec) in enumerate(workers):
+            if phase == _FRESH:
+                acts.append(Action("step0", wid))
+            elif phase == _HASPARAMS:
+                acts.append(Action("compute", wid, local=True))
+            elif phase == _COMPUTED:
+                acts.append(Action("push", wid))
+            elif phase == _DRAINED:
+                acts.append(Action("bye", wid, local=True))
+            elif phase == _DEAD:
+                if self.bug == "zombie-respawn" or \
+                        respawns[wid] < self.max_respawns:
+                    acts.append(Action("respawn", wid))
+        for i, (op, wid, at_v) in enumerate(self.events):
+            if not fired[i] and version >= at_v and op == "kill" and \
+                    wid < len(workers) and \
+                    workers[wid][0] not in (_DEAD, _CLOSED):
+                acts.append(Action(f"kill[{i}]", wid))
+        for i, at_v in enumerate(self.diverge_at):
+            if not dfired[i] and version >= at_v and not fatal:
+                acts.append(Action(f"diverge[{i}]", 0))
+        return acts
+
+    def _set(self, workers, wid, w2):
+        return workers[:wid] + (w2,) + workers[wid + 1:]
+
+    def apply(self, state, a: Action):
+        version, applies, rejected, rollbacks, fatal, fired, dfired, \
+            workers, respawns = state
+        label = a.label
+        if label.startswith("kill["):
+            i = int(label[label.index("[") + 1:-1])
+            fired = fired[:i] + (True,) + fired[i + 1:]
+            return (version, applies, rejected, rollbacks, fatal, fired,
+                    dfired, self._set(workers, a.wid, (_DEAD, -1, 0)),
+                    respawns)
+        if label.startswith("diverge["):
+            i = int(label[label.index("[") + 1:-1])
+            dfired = dfired[:i] + (True,) + dfired[i + 1:]
+            rollbacks += 1
+            if self.bug != "rollback-unbounded" and \
+                    rollbacks > self.max_rollbacks:
+                fatal = True    # remediation budget exhausted: abort the run
+            return (version, applies, rejected, rollbacks, fatal, fired,
+                    dfired, workers, respawns)
+        if label == "respawn":
+            respawns = respawns[:a.wid] + (respawns[a.wid] + 1,) + \
+                respawns[a.wid + 1:]
+            return (version, applies, rejected, rollbacks, fatal, fired,
+                    dfired, self._set(workers, a.wid, (_FRESH, -1, 0)),
+                    respawns)
+        phase, rv, consec = workers[a.wid]
+        done = self._done(version, fatal)
+        if label == "step0":
+            w2 = (_DRAINED, -1, consec) if done else \
+                (_HASPARAMS, version, consec)
+        elif label == "compute":
+            w2 = (_COMPUTED, rv, consec)
+        elif label == "bye":
+            w2 = (_CLOSED, rv, consec)
+        else:  # push
+            if done:
+                w2 = (_DRAINED, rv, consec)          # late: answered "done"
+            elif a.wid in self.bad:
+                rejected += 1
+                consec += 1
+                if self.bug == "reject-bumps-version":
+                    version += 1   # the seeded defect: reject still bumps
+                if consec >= self.quarantine_after:
+                    w2 = (_DRAINED, rv, consec)      # quarantined
+                else:
+                    w2 = (_HASPARAMS, version, consec)
+            else:
+                applies += 1
+                version += 1
+                w2 = (_DRAINED, rv, 0) if self._done(version, fatal) else \
+                    (_HASPARAMS, version, 0)
+        return (version, applies, rejected, rollbacks, fatal, fired, dfired,
+                self._set(workers, a.wid, w2), respawns)
+
+    # ---- invariants
+
+    def invariant(self, state):
+        version, applies, _rej, rollbacks, fatal, _f, _df, workers, \
+            respawns = state
+        if version != applies:
+            return ("version-monotone",
+                    f"version={version} after {applies} applies — a "
+                    f"rejected push must NOT advance the version")
+        if version > self.total:
+            return ("version-monotone",
+                    f"version={version} exceeded the step budget "
+                    f"{self.total}")
+        if rollbacks > self.max_rollbacks and not fatal:
+            return ("rollback-bounded",
+                    f"{rollbacks} rollbacks exceed "
+                    f"max_rollbacks={self.max_rollbacks} without the run "
+                    f"going fatal — remediation would loop forever")
+        for wid, n in enumerate(respawns):
+            if n > self.max_respawns:
+                return ("respawn-capped",
+                        f"worker {wid} respawned {n} times past "
+                        f"max_respawns={self.max_respawns} — eviction "
+                        f"failed")
+        for wid, (phase, rv, _c) in enumerate(workers):
+            if phase in (_HASPARAMS, _COMPUTED) and not 0 <= rv <= version:
+                return ("staleness-observed",
+                        f"worker {wid} holds read_version={rv} outside "
+                        f"[0, {version}]")
+        return None
+
+    def is_final(self, state) -> bool:
+        return all(w[0] in (_CLOSED, _DEAD) for w in state[7])
+
+    def at_end(self, state):
+        version, _ap, _rej, _rb, fatal, _f, _df, workers, _rs = state
+        if fatal or version >= self.total:
+            return None
+        closed_good = [wid for wid, w in enumerate(workers)
+                       if w[0] == _CLOSED and wid not in self.bad]
+        if closed_good:
+            return ("watchdog-termination",
+                    f"healthy workers {closed_good} were drained at "
+                    f"version={version} < budget {self.total} with no "
+                    f"fatal condition")
+        return None
+
+    def at_stuck(self, state, truncated: bool = False):
+        if truncated:
+            return None
+        version, _ap, _rej, _rb, _fatal, _f, _df, workers, _rs = state
+        alive = [wid for wid, w in enumerate(workers)
+                 if w[0] not in (_DEAD, _CLOSED)]
+        if alive:
+            return ("watchdog-termination",
+                    f"lost wakeup at version={version}: live workers "
+                    f"{alive} blocked forever")
+        return None
+
+
 # ------------------------------------------------------------ config suites
 
 
@@ -514,6 +721,11 @@ SUITE: List[Tuple[str, "object"]] = [
         events=[("kill", 1, 1), ("restart", 1, 2)])),
     ("live/elastic-join", LiveModel(
         total=4, n_workers=2, events=[("join", 0, 1)])),
+    ("recovery/sentinel-quarantine", RecoveryModel(
+        total=4, n_workers=2, bad=(1,), quarantine_after=2)),
+    ("recovery/rollback-respawn", RecoveryModel(
+        total=4, n_workers=2, events=[("kill", 1, 1)],
+        diverge_at=(2,), max_rollbacks=1, max_respawns=1)),
 ]
 
 #: seeded-bug fixtures: every invariant has at least one proving the
@@ -536,6 +748,16 @@ BUGS: List[Tuple[str, str, "object"]] = [
         total=3, n_workers=2, bug="ghost-done")),
     ("wrong-verb", "trace-legal", LiveModel(
         total=2, n_workers=2, bug="wrong-verb")),
+    ("reject-bumps-version", "version-monotone", RecoveryModel(
+        total=3, n_workers=2, bad=(1,), bug="reject-bumps-version")),
+    # three divergence events against a budget of one rollback: the correct
+    # model flips fatal on the second, the seeded one remediates forever
+    ("rollback-unbounded", "rollback-bounded", RecoveryModel(
+        total=4, n_workers=2, diverge_at=(1, 1, 1), max_rollbacks=1,
+        bug="rollback-unbounded")),
+    ("zombie-respawn", "respawn-capped", RecoveryModel(
+        total=3, n_workers=2, events=[("kill", 1, 1)], max_respawns=0,
+        bug="zombie-respawn")),
 ]
 
 

@@ -45,6 +45,7 @@ INSTRUMENTED: Dict[str, Tuple[str, ...]] = {
     "repro.dist.chief": ("Chief",),
     "repro.data.prefetch": ("ChunkPrefetcher",),
     "repro.checkpoint.writer": ("AsyncCheckpointer",),
+    "repro.resilience.supervisor": ("Supervisor", "LeaseTable"),
 }
 
 

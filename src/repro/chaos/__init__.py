@@ -1,0 +1,6 @@
+"""Seeded chaos harness for the self-healing training stack (DESIGN.md §14)."""
+from repro.chaos.inject import (  # noqa: F401
+    ChaosPlan,
+    slow_disk,
+    truncate_newest,
+)

@@ -1,11 +1,15 @@
 """Checkpointing: v1 npz pytree archives + the v2 full-state subsystem
 (TrainState snapshots, async manifest writer, resharding restore — DESIGN.md §8)."""
 from repro.checkpoint.npz import (  # noqa: F401
+    CorruptCheckpointError,
+    file_sha256,
     latest_step,
+    manifest_entries,
     read_manifest,
     restore,
     restore_latest,
     save,
+    verify_entry,
 )
 from repro.checkpoint.state import (  # noqa: F401
     dist_restore,

@@ -9,9 +9,20 @@ Layout: <dir>/step_<N>.npz. Which step is current is recorded by the
 MANIFEST.json written by `repro.checkpoint.writer` (atomic, with retention);
 `latest_step` also understands the v1 bare `LATEST` file so old checkpoint
 dirs keep restoring. Writes are atomic (tmp + rename).
+
+Verification (DESIGN.md §14): every manifest entry records the archive's
+SHA-256 (`sha256` key, hex). `verify_entry` recomputes and compares;
+`restore_latest` verifies before restoring and FALLS BACK through manifest
+history past corrupt/truncated archives to the newest intact step, so one
+torn write (power loss mid-rename on a non-atomic filesystem, a bad disk
+sector) costs at most `ckpt_every` steps of progress, never the run. All
+corruption surfaces as `CorruptCheckpointError` (a ValueError) naming the
+step and path — template mismatches stay plain ValueErrors and do NOT fall
+back: restoring an older step cannot fix a wrong model config.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import tempfile
@@ -20,6 +31,22 @@ import jax
 import numpy as np
 
 MANIFEST = "MANIFEST.json"
+
+
+class CorruptCheckpointError(ValueError):
+    """An archive that cannot be trusted: checksum mismatch, truncated or
+    undecodable npz. Distinct from a template mismatch (plain ValueError) so
+    restore_latest knows when falling back to an older step is sound."""
+
+
+def file_sha256(path: str, chunk: int = 1 << 20) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                return h.hexdigest()
+            h.update(block)
 
 
 def _flatten(tree):
@@ -88,30 +115,78 @@ def latest_step(ckpt_dir: str):
         return int(f.read().strip())
 
 
-def restore_latest(ckpt_dir: str, tree_like, shardings=None, attempts: int = 8):
-    """Restore the newest snapshot, racing safely against retention.
+def manifest_entries(ckpt_dir: str) -> list:
+    """Manifest entries newest-first ([] when there is no manifest)."""
+    man = read_manifest(ckpt_dir)
+    if man is None:
+        return []
+    return sorted(man.get("ckpts", []), key=lambda c: c["step"], reverse=True)
 
-    The writer's retention pass updates MANIFEST.json *before* unlinking a
-    pruned archive, so a reader can never be pointed at a file that is about
-    to disappear — but a reader that loaded the manifest just *before* the
-    update can still lose the race: its (stale) latest step gets pruned
-    between `latest_step` and `np.load`. The fix is reader-side: on
-    FileNotFoundError, re-read the manifest (which by then names a newer,
-    retained step) and retry. Returns `(step, tree)`; raises
-    FileNotFoundError only when the dir has no checkpoints at all or a step
-    keeps vanishing `attempts` times (a broken dir, not a race).
+
+def verify_entry(ckpt_dir: str, entry: dict) -> None:
+    """Recompute an entry's archive SHA-256 against the manifest record.
+    Entries written before checksums were recorded pass vacuously; a
+    mismatch raises CorruptCheckpointError naming the step and path."""
+    want = entry.get("sha256")
+    if want is None:
+        return
+    path = os.path.join(ckpt_dir, entry["file"])
+    got = file_sha256(path)
+    if got != want:
+        raise CorruptCheckpointError(
+            f"checkpoint step {entry['step']} at {path} fails its manifest "
+            f"checksum (sha256 {got[:12]} != recorded {want[:12]}): the "
+            f"archive is corrupt or truncated")
+
+
+def restore_latest(ckpt_dir: str, tree_like, shardings=None, attempts: int = 8):
+    """Restore the newest INTACT snapshot, racing safely against retention.
+
+    Two reader-side disciplines compose here:
+
+      * retention race — the writer updates MANIFEST.json *before* unlinking
+        a pruned archive, so a reader can never be pointed at a file about
+        to disappear; a reader whose manifest read lost the race simply
+        re-reads it (up to `attempts` times) and sees the retained step.
+      * verification fallback — each candidate entry's SHA-256 is checked
+        before the restore; a corrupt/truncated archive is skipped and the
+        next-older manifest entry tried, down to the oldest retained step.
+
+    Returns `(step, tree)`. Raises FileNotFoundError when the dir has no
+    checkpoints (or keeps vanishing — a deleted dir, not a race) and
+    CorruptCheckpointError when every retained entry fails verification.
+    Template mismatches (plain ValueError) propagate immediately: an older
+    snapshot of the wrong config is not a recovery.
     """
     last = None
     for _ in range(attempts):
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-        try:
-            return step, restore(ckpt_dir, step, tree_like, shardings=shardings)
-        except FileNotFoundError as e:
-            # step was pruned under us; the next manifest read sees its
-            # replacement (manifest-before-unlink ordering in the writer)
-            last = e
+        entries = manifest_entries(ckpt_dir)
+        if not entries:
+            # v1 dir: a bare LATEST pointer names the single candidate
+            step = latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+            entries = [{"step": step,
+                        "file": os.path.basename(step_path(ckpt_dir, step))}]
+        tried, raced = [], False
+        for entry in entries:
+            step = entry["step"]
+            try:
+                verify_entry(ckpt_dir, entry)
+                return step, restore(ckpt_dir, step, tree_like,
+                                     shardings=shardings)
+            except FileNotFoundError as e:
+                # pruned under us; the next manifest read sees its
+                # replacement (manifest-before-unlink ordering in the writer)
+                last, raced = e, True
+                break
+            except CorruptCheckpointError as e:
+                tried.append(str(e))
+        if raced:
+            continue
+        raise CorruptCheckpointError(
+            f"no intact checkpoint in {ckpt_dir}: every retained manifest "
+            f"entry failed verification — " + " | ".join(tried))
     raise FileNotFoundError(
         f"checkpoint archives in {ckpt_dir} kept vanishing across "
         f"{attempts} manifest reads (last: {last}); the dir is being "
@@ -141,21 +216,38 @@ def restore(ckpt_dir: str, step: int, tree_like, shardings=None):
 
     Tree/archive mismatches raise ValueError naming the missing and
     unexpected keys (not a bare KeyError), so a checkpoint written by a
-    different config fails with an actionable message."""
+    different config fails with an actionable message. Archives that cannot
+    even be decoded (truncated file, flipped bytes, bad CRC) raise
+    CorruptCheckpointError naming the step and path, instead of leaking
+    zipfile/zlib internals."""
     path = step_path(ckpt_dir, step)
     if not os.path.exists(path):
         raise FileNotFoundError(f"no checkpoint archive at {path}")
-    data = np.load(path)
+    try:
+        data = np.load(path)
+        archived = set(data.files)
+    except Exception as e:
+        raise CorruptCheckpointError(
+            f"checkpoint step {step} at {path} cannot be read "
+            f"({type(e).__name__}: {e}): the archive is corrupt or "
+            f"truncated") from e
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     keys = ["/".join(str(x) for x in p) for p, _ in flat]
-    archived = set(data.files)
     missing = [k for k in keys if k not in archived]
     unexpected = sorted(archived - set(keys))
     if missing or unexpected:
         raise _mismatch_error(path, missing, unexpected, len(keys), len(archived))
     leaves = []
     for key, (p, leaf) in zip(keys, flat):
-        arr = data[key]
+        try:
+            arr = data[key]
+        except Exception as e:
+            # a flipped byte inside the compressed stream surfaces here as a
+            # CRC/zlib error, not at np.load
+            raise CorruptCheckpointError(
+                f"checkpoint step {step} at {path}: entry {key!r} cannot be "
+                f"decoded ({type(e).__name__}: {e}): the archive is corrupt "
+                f"or truncated") from e
         if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(
                 f"checkpoint {path}: leaf {key!r} has shape {tuple(arr.shape)} "

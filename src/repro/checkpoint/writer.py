@@ -29,7 +29,14 @@ import tempfile
 import threading
 import time
 
-from repro.checkpoint.npz import MANIFEST, _flatten, read_manifest, step_path, write_archive
+from repro.checkpoint.npz import (
+    MANIFEST,
+    _flatten,
+    file_sha256,
+    read_manifest,
+    step_path,
+    write_archive,
+)
 
 
 def _write_manifest(ckpt_dir: str, man: dict) -> None:
@@ -44,14 +51,17 @@ def _write_manifest(ckpt_dir: str, man: dict) -> None:
 
 
 def _update_manifest(ckpt_dir: str, step: int, fname: str, meta: dict,
-                     keep_last: int) -> None:
+                     keep_last: int, sha256: str = None) -> None:
     """Append/replace the entry for `step`, advance `latest`, prune beyond
     `keep_last` (0 keeps everything). Called only from the writer thread (or
-    the sync path), so updates are serialized."""
+    the sync path), so updates are serialized. `sha256` is the archive's
+    content hash (npz.file_sha256) recorded for restore-time verification."""
     man = read_manifest(ckpt_dir) or {"version": 2, "latest": None, "ckpts": []}
     man["ckpts"] = [c for c in man["ckpts"] if c["step"] != step]
-    man["ckpts"].append({"step": step, "file": fname, "time": time.time(),
-                         "meta": meta})
+    entry = {"step": step, "file": fname, "time": time.time(), "meta": meta}
+    if sha256 is not None:
+        entry["sha256"] = sha256
+    man["ckpts"].append(entry)
     man["ckpts"].sort(key=lambda c: c["step"])
     pruned = []
     if keep_last and len(man["ckpts"]) > keep_last:
@@ -86,7 +96,7 @@ def save_train_state(ckpt_dir: str, step: int, tree, meta: dict = None,
     right call for one-off snapshots outside a training loop."""
     path = write_archive(ckpt_dir, step, _flatten(tree))
     _update_manifest(ckpt_dir, step, os.path.basename(path), dict(meta or {}),
-                     keep_last)
+                     keep_last, sha256=file_sha256(path))
     return path
 
 
@@ -164,7 +174,8 @@ class AsyncCheckpointer:
                 step, flat = item
                 path = write_archive(self.ckpt_dir, step, flat)
                 _update_manifest(self.ckpt_dir, step, os.path.basename(path),
-                                 self.meta, self.keep_last)
+                                 self.meta, self.keep_last,
+                                 sha256=file_sha256(path))
             except BaseException as e:  # surfaced on the caller's next call
                 with self._lock:
                     self._err = e

@@ -14,6 +14,15 @@ cannot complete without it — while live mode absorbs it and the watchdog only
 fires if the VERSION counter stalls for `spec.dist_timeout` seconds (i.e.
 nobody is pushing anymore). Worker stderr is captured to per-worker temp
 files and surfaced in the failure message, not interleaved with the chief's.
+
+Self-healing (DESIGN.md §14): live spawned runs hand their processes to a
+`repro.resilience.Supervisor` — death (or a heartbeat-lease expiry, with
+`spec.dist_lease_s`) triggers respawn under capped exponential backoff, and
+persistent failures are evicted. `spec.sentinel`/`spec.rollback` arm the
+store's gradient screen and divergence rollback; an unrecoverable store
+(`store.fatal_error()`) fails the run here, in the launcher's thread, with
+the store's diagnosis. A `repro.chaos.ChaosPlan` drives deterministic fault
+injection through the same seams (`chaos=` argument).
 """
 from __future__ import annotations
 
@@ -31,6 +40,7 @@ from repro.dist import protocol
 from repro.dist.chief import Chief
 from repro.dist.scenarios import Scenario
 from repro.dist.store import ParameterStore
+from repro.resilience import LeaseTable, SentinelPolicy, Supervisor
 
 
 def _src_root() -> str:
@@ -91,15 +101,22 @@ class _WorkerProc:
 
 
 def run_local(spec, X, y, n_classes: int, Xtest=None, ytest=None,
-              strategy=None, spawn: bool = True, port: int = 0) -> dict:
+              strategy=None, spawn: bool = True, port: int = 0,
+              chaos=None) -> dict:
     """Run `spec` as a real multi-process async parameter server. Same result
     contract as delaysim.run (train/val losses, history, model, schedule,
     n_steps) plus: staleness_seq, staleness_hist, and a `dist` diagnostics
-    dict (drops, late, worker_exits, joins, n_workers, mode).
+    dict (drops, late, worker_exits, joins, n_workers, mode, and — when the
+    resilience layer is armed — rejections/rollbacks/supervisor counters).
 
     spawn=False runs the chief only (`--role chief`): the listener address is
     printed and externally launched `repro.dist.worker` processes connect to
-    it — lifecycle events that target spawned processes are then skipped."""
+    it — lifecycle events that target spawned processes are then skipped.
+
+    `chaos` takes a `repro.chaos.ChaosPlan` (live mode only): deterministic
+    fault injection through the launcher (kills, checkpoint truncation), the
+    chief (connection resets) and the workers (NaN/exploding gradients,
+    garbage frames)."""
     if strategy is None:
         from repro.engine.strategies import get_compensator
 
@@ -132,11 +149,18 @@ def run_local(spec, X, y, n_classes: int, Xtest=None, ytest=None,
             meta={"backend": "dist", "mode": spec.mode, "strategy": spec.strategy,
                   "seed": spec.seed, "dist_mode": spec.dist_mode})
 
+    policy = None
+    if not replay:
+        policy = SentinelPolicy.from_spec(spec)
+        if not (policy.screening or policy.rollback):
+            policy = None
+
     store = ParameterStore(
         spec, strategy, W0, train, val, total_steps=T,
         schedule=schedule if replay else None,
         drop_rate=scenario.drop_rate, seed=spec.seed,
-        checkpointer=checkpointer, ckpt_every=spec.ckpt_every)
+        checkpointer=checkpointer, ckpt_every=spec.ckpt_every,
+        policy=policy)
 
     meta = {
         "Xtr": np.asarray(train[0], np.float64),
@@ -151,7 +175,22 @@ def run_local(spec, X, y, n_classes: int, Xtest=None, ytest=None,
         "time_scale": scenario.time_scale,
         "n_workers": n_workers,
     }
-    chief = Chief(store, meta, port=port)
+    chaos_resets = ()
+    chaos_kills: dict = {}
+    truncate_at = None
+    if chaos is not None and not replay:
+        wm = chaos.worker_meta()
+        if wm:
+            meta["chaos"] = wm
+        chaos_resets = chaos.reset_events()
+        chaos_kills = dict(chaos.kill_events())
+        truncate_at = chaos.truncate_at
+
+    supervise = spawn and not replay and spec.dist_supervise
+    leases = LeaseTable(spec.dist_lease_s) \
+        if supervise and spec.dist_lease_s else None
+    chief = Chief(store, meta, port=port, leases=leases,
+                  chaos_resets=chaos_resets)
     addr = protocol.format_addr(chief.address)
     env = _worker_env()
 
@@ -159,27 +198,58 @@ def run_local(spec, X, y, n_classes: int, Xtest=None, ytest=None,
         print(f"dist chief listening on {addr} "
               f"(workers: PYTHONPATH=src python -m repro.dist.worker --addr {addr})",
               flush=True)
-    procs = {w: _WorkerProc(w, addr, env) for w in range(n_workers)} if spawn else {}
+    sup = None
+    procs: dict = {}
+    if supervise:
+        sup = Supervisor(lambda wid: _WorkerProc(wid, addr, env), n_workers,
+                         max_respawns=spec.dist_max_respawns, leases=leases,
+                         seed=spec.seed)
+        sup.start()
+    elif spawn:
+        procs = {w: _WorkerProc(w, addr, env) for w in range(n_workers)}
     extra: list = []      # elastically joined workers (wid assigned by chief)
     fired = 0
     try:
         last_v, last_move = store.progress(), time.monotonic()
         while not store.done():
+            fatal = store.fatal_error()
+            if fatal is not None:
+                raise RuntimeError(str(fatal))
             v = store.progress()
             if v != last_v:
                 last_v, last_move = v, time.monotonic()
             for op, wid, _at in scenario.due(fired, v):
                 fired += 1
                 if op == "kill":
-                    if wid in procs:
+                    if sup is not None:
+                        sup.kill(wid)
+                    elif wid in procs:
                         procs[wid].kill()
                 elif op == "restart":
-                    if wid in procs:
-                        procs[wid].kill()
-                        procs[wid].cleanup()
-                    procs[wid] = _WorkerProc(wid, addr, env)
+                    if sup is not None:
+                        sup.respawn_now(wid)
+                    else:
+                        if wid in procs:
+                            procs[wid].kill()
+                            procs[wid].cleanup()
+                        procs[wid] = _WorkerProc(wid, addr, env)
                 elif op == "join":
-                    extra.append(_WorkerProc(None, addr, env))
+                    if sup is not None:
+                        sup.spawn_extra()
+                    else:
+                        extra.append(_WorkerProc(None, addr, env))
+            for wid in [w for w, at in chaos_kills.items() if v >= at]:
+                del chaos_kills[wid]
+                if sup is not None:
+                    sup.kill(wid)
+                elif wid in procs:
+                    procs[wid].kill()
+            if truncate_at is not None and v >= truncate_at and spec.ckpt_dir:
+                from repro.chaos import truncate_newest
+
+                # retries until an archive exists to tear, then disarms
+                if truncate_newest(spec.ckpt_dir) is not None:
+                    truncate_at = None
             if replay:
                 dead = [w for w, p in procs.items() if not p.alive()]
                 if dead and not store.done():
@@ -188,21 +258,29 @@ def run_local(spec, X, y, n_classes: int, Xtest=None, ytest=None,
                         f"replay worker {w} exited before its schedule drained "
                         f"(version {v}/{T}); stderr tail:\n{procs[w].stderr_tail()}")
             if time.monotonic() - last_move > spec.dist_timeout:
-                tails = {w: p.stderr_tail(5) for w, p in procs.items()}
+                tails = sup.stderr_tails(5) if sup is not None else \
+                    {w: p.stderr_tail(5) for w, p in procs.items()}
                 raise RuntimeError(
                     f"dist run stalled at version {v}/{T} for "
                     f"{spec.dist_timeout:.0f}s (mode={spec.dist_mode}); "
                     f"worker stderr tails: {tails}")
             time.sleep(0.01)
-        # drain: workers learn "done" on their next request and exit
+        # drain: workers learn "done" on their next request and exit. Stop
+        # the supervisor FIRST: exits on a drained run are success, not
+        # failures to heal.
+        if sup is not None:
+            sup.stop_polling()
         deadline = time.monotonic() + 10.0
-        for p in list(procs.values()) + extra:
+        for p in (sup.procs() if sup is not None
+                  else list(procs.values()) + extra):
             if p.alive():
                 try:
                     p.proc.wait(timeout=max(0.1, deadline - time.monotonic()))
                 except subprocess.TimeoutExpired:
                     p.kill()
     finally:
+        if sup is not None:
+            sup.close()     # kills + cleans whatever is still up
         for p in list(procs.values()) + extra:
             if p.alive():
                 p.kill()
@@ -211,7 +289,7 @@ def run_local(spec, X, y, n_classes: int, Xtest=None, ytest=None,
         store.final_snapshot()
 
     return _result(spec, store, train, val, schedule, Xtest, ytest,
-                   n_workers=n_workers)
+                   n_workers=n_workers, sup=sup)
 
 
 def _final_metrics(W, train, val, Xtest, ytest) -> dict:
@@ -227,7 +305,7 @@ def _final_metrics(W, train, val, Xtest, ytest) -> dict:
 
 
 def _result(spec, store: ParameterStore, train, val, schedule, Xtest, ytest,
-            n_workers: int) -> dict:
+            n_workers: int, sup=None) -> dict:
     out = _final_metrics(store.W, train, val, Xtest, ytest)
     out["history"] = [(t, float(e)) for t, e in store.history]
     out["n_steps"] = store.progress()
@@ -242,6 +320,9 @@ def _result(spec, store: ParameterStore, train, val, schedule, Xtest, ytest,
         "worker_exits": store.worker_exits,
         "joins": store.joins,
     }
+    out["dist"].update(store.resilience_counters())
+    if sup is not None:
+        out["dist"]["supervisor"] = sup.stats()
     return out
 
 

@@ -29,6 +29,7 @@ the chief's `applied_version - read_v` is the *observed* staleness.
 """
 from __future__ import annotations
 
+import random
 import socket
 import time
 from multiprocessing.connection import Client, Listener
@@ -57,14 +58,31 @@ def listen(host: str = DEFAULT_HOST, port: int = 0, authkey: bytes = AUTHKEY) ->
     return Listener((host, port), family="AF_INET", authkey=authkey)
 
 
-def connect(addr: tuple, authkey: bytes = AUTHKEY, timeout: float = 20.0):
+def connect(addr: tuple, authkey: bytes = AUTHKEY, timeout: float = 20.0,
+            backoff_base: float = 0.02, backoff_cap: float = 1.0):
     """Connect to the chief, retrying while it boots (worker processes race
-    the listener's bind)."""
+    the listener's bind, and a respawned worker races the chief's recovery).
+
+    Retries back off exponentially from `backoff_base` up to `backoff_cap`
+    seconds with full jitter — a respawning fleet must not hammer the
+    listener in lockstep. On timeout the last transport error is re-raised
+    wrapped in a ConnectionError recording elapsed time and attempt count.
+    """
     deadline = time.monotonic() + timeout
+    start = time.monotonic()
+    attempts = 0
+    delay = backoff_base
     while True:
         try:
             return Client(addr, family="AF_INET", authkey=authkey)
-        except (ConnectionRefusedError, socket.timeout, OSError):
-            if time.monotonic() >= deadline:
-                raise
-            time.sleep(0.05)
+        except (ConnectionRefusedError, socket.timeout, OSError) as e:
+            attempts += 1
+            now = time.monotonic()
+            if now >= deadline:
+                raise ConnectionError(
+                    f"could not connect to chief at {format_addr(addr)} "
+                    f"after {attempts} attempts over {now - start:.1f}s "
+                    f"(last error: {type(e).__name__}: {e})") from e
+            # full jitter: sleep U(0, delay], never past the deadline
+            time.sleep(min(random.random() * delay + 1e-3, deadline - now))
+            delay = min(delay * 2, backoff_cap)

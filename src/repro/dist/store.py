@@ -81,7 +81,7 @@ class ParameterStore:
 
     def __init__(self, spec, strategy, W0, train, val, total_steps: int,
                  schedule=None, drop_rate: float = 0.0, seed: int = 0,
-                 checkpointer=None, ckpt_every: int = 0):
+                 checkpointer=None, ckpt_every: int = 0, policy=None):
         self.spec = spec
         self.strategy = strategy
         self.W = np.asarray(W0, np.float64).copy()
@@ -107,6 +107,27 @@ class ParameterStore:
         self.late = 0                    # pushes arriving after the budget
         self.joins = 0
         self.worker_exits = 0
+        self.bad_frames = 0              # malformed/unparseable worker frames
+        self.resets = 0                  # chaos-injected connection resets
+        # ---- resilience (DESIGN.md §14): sentinel screen + rollback policy.
+        # The screen/detector own no lock — every call happens under `cond`.
+        self.policy = policy
+        self.screen = None
+        self.detector = None
+        if policy is not None and policy.screening:
+            from repro.resilience import DivergenceDetector, GradScreen
+
+            self.screen = GradScreen(policy)
+            if policy.rollback:
+                self.detector = DivergenceDetector(policy.factor)
+        self.lr_scale = 1.0              # cut by lr_backoff at every rollback
+        self.rollbacks = 0
+        self.rollback_log: list = []     # (version, restored_step|None, reason)
+        self.diverged = 0                # post-apply divergences detected
+        self.fatal: Exception | None = None   # set -> drain workers, launcher raises
+        # last committed sane state: the rollback target when no verified
+        # on-disk snapshot exists (or the dir predates checksums)
+        self._good = (self.W.copy(), self.r.copy())
         # ---- concurrency
         self.cond = threading.Condition()
         self._drop_rng = np.random.default_rng(seed + 7919)
@@ -165,18 +186,26 @@ class ParameterStore:
 
     def _apply_opt(self, gt):
         spec = self.spec
+        lr = spec.lr * self.lr_scale      # lr_scale == 1.0 until a rollback
         if spec.optimizer == "sgd":
-            return self.W - spec.lr * gt
+            return self.W - lr * gt
         if spec.optimizer == "rmsprop":
             self.r = spec.rmsprop_beta * self.r + (1 - spec.rmsprop_beta) * gt * gt
-            return self.W - spec.lr * gt / np.sqrt(self.r + spec.eps)
+            return self.W - lr * gt / np.sqrt(self.r + spec.eps)
         if spec.optimizer == "adagrad":
             self.r = self.r + gt * gt
-            return self.W - spec.lr * gt / np.sqrt(self.r + spec.eps)
+            return self.W - lr * gt / np.sqrt(self.r + spec.eps)
         raise ValueError(spec.optimizer)
 
-    def _apply_locked(self, g, read_version: int, rows, w_fetch) -> int:
-        """One server step (caller holds the lock). Returns observed staleness."""
+    def _apply_locked(self, g, read_version: int, rows, w_fetch,
+                      wid: int = None) -> int:
+        """One server step (caller holds the lock). Returns observed staleness.
+
+        With a rollback-capable policy the post-apply validation loss is the
+        divergence backstop: a finite-but-poisoned update that slipped the
+        per-push screen trips here, the update is NOT committed (version does
+        not advance — exactly-once applies and the staleness identity stay
+        intact), and the store rolls back to the last verified state."""
         t = self.version
         s = t - int(read_version)
         g = np.asarray(g, np.float64)
@@ -191,6 +220,12 @@ class ParameterStore:
         loss_before = _loss(self.W, self.Xa[rows], self.y[rows]) if self.guided else 0.0
         W2 = self._apply_opt(gt)
         avg = _loss(W2, self.Xva, self.yv)
+        if self.detector is not None and self.detector.update(avg):
+            # poisoned trajectory: discard this update (the accumulator `r`
+            # is restored by the rollback) and remediate
+            self.diverged += 1
+            self._rollback_locked(wid)
+            return s
         if self.guided:
             d_avg = avg - self.prev_avg
             d_own = _loss(W2, self.Xa[rows], self.y[rows]) - loss_before
@@ -210,10 +245,96 @@ class ParameterStore:
                 del self._ring[old]
         self.history.append((self.version, avg))
         self.staleness.append(s)
+        if self.detector is not None:
+            # the committed state is by construction sane: the in-memory
+            # rollback target when no verified disk snapshot exists
+            self._good = (self.W.copy(), self.r.copy())
         if self._ckpt is not None and self._ckpt_every and self.version % self._ckpt_every == 0:
             self._snapshot()
         self.cond.notify_all()
         return s
+
+    # ------------------------------------------------------------ resilience
+
+    def _rollback_locked(self, wid=None):
+        """Remediate a detected divergence (caller holds the lock): restore
+        W/r from the newest VERIFIED checkpoint (sha-checked, falling back
+        through manifest history) or the in-memory last-good copy, back the
+        lr off, and quarantine the offending worker. The version counter is
+        NEVER rewound — applies stay exactly-once and observed staleness
+        stays `version - read_version`. Exhausting `max_rollbacks` marks the
+        run fatal: workers drain on their next request, the launcher raises."""
+        policy = self.policy
+        self.rollbacks += 1
+        if self.rollbacks > policy.max_rollbacks:
+            self.fatal = RuntimeError(
+                f"divergence persisted through {policy.max_rollbacks} "
+                f"rollbacks (version {self.version}/{self.total}, "
+                f"lr_scale {self.lr_scale:.3g}); the trajectory is not "
+                f"recoverable by remediation")
+            self.cond.notify_all()
+            return
+        restored_step = None
+        W, r = self._good
+        if self._ckpt is not None:
+            from repro.checkpoint import CorruptCheckpointError, dist_restore
+
+            try:
+                snap = dist_restore(self.spec.ckpt_dir)
+                W = snap["W"]
+                r = snap.get("r", np.zeros_like(self.W))
+                restored_step = int(snap["version"])
+            except (FileNotFoundError, CorruptCheckpointError):
+                pass  # nothing intact on disk (yet): in-memory last-good
+        self.W = np.asarray(W, np.float64).copy()
+        self.r = np.asarray(r, np.float64).copy()
+        self.lr_scale *= policy.lr_backoff
+        self.prev_avg = _loss(self.W, self.Xva, self.yv)
+        if self.detector is not None:
+            self.detector.best = min(self.detector.best, self.prev_avg)
+        # the guided consistency window scored a trajectory that no longer
+        # exists; restart it rather than replaying stale corrections
+        self.wscore[:] = 0.0
+        self.wgrads[:] = 0.0
+        if wid is not None and self.screen is not None:
+            self.screen.quarantine(wid, self.version)
+        self.rollback_log.append((self.version, restored_step,
+                                  "post-apply divergence"))
+        self.cond.notify_all()
+
+    def record_bad_frame(self, wid, exc) -> None:
+        """A malformed/unparseable frame arrived on a worker connection: the
+        chief drops the connection, counts it, and the run continues."""
+        with self.cond:
+            self.bad_frames += 1
+            self.cond.notify_all()
+
+    def record_reset(self) -> None:
+        """A chaos-injected connection reset (repro.chaos): counted apart
+        from organic worker exits so tests can assert the injection fired."""
+        with self.cond:
+            self.resets += 1
+            self.cond.notify_all()
+
+    def fatal_error(self):
+        with self.cond:
+            return self.fatal
+
+    def resilience_counters(self) -> dict:
+        """The sentinel/remediation half of the launcher's `dist` result
+        (supervisor stats merge in at the launcher)."""
+        with self.cond:
+            out = {
+                "bad_frames": self.bad_frames,
+                "resets": self.resets,
+                "rollbacks": self.rollbacks,
+                "diverged": self.diverged,
+                "lr_scale": self.lr_scale,
+                "rollback_log": list(self.rollback_log),
+            }
+            if self.screen is not None:
+                out.update(self.screen.counters())
+            return out
 
     def _compensate_maybe(self, g, w_fetch):
         from repro.engine.strategies import DelayCompensator
@@ -228,7 +349,8 @@ class ParameterStore:
         from repro.checkpoint import dist_snapshot
 
         self._ckpt.save(self.version, dist_snapshot(
-            self.W, self.version, np.asarray(self.staleness, np.int64)))
+            self.W, self.version, np.asarray(self.staleness, np.int64),
+            r=self.r, lr_scale=self.lr_scale))
 
     def final_snapshot(self):
         if self._ckpt is not None:
@@ -263,16 +385,29 @@ class ParameterStore:
 
     def live_step(self, wid: int, g, read_version: int, rows, w_fetch):
         """Apply a push (if any) and hand back the freshest params. Returns
-        (W, version) or None once the step budget is exhausted."""
+        (W, version) or None once the step budget is exhausted (or the run
+        went fatal — remediation exhausted — and workers should drain).
+
+        With a sentinel policy the push is screened first: non-finite (and,
+        at level "full", norm-exploded) gradients are rejected and counted
+        per worker, never applied; a quarantined worker's pushes are ignored
+        until its ban lifts, but it still receives fresh params — it may
+        recover (a transient NaN source) without a respawn."""
         with self.cond:
+            if self.fatal is not None:
+                return None
             if g is not None:
+                g = np.asarray(g, np.float64)
                 if self.version >= self.total:
                     self.late += 1
+                elif self.screen is not None and \
+                        self.screen.admit(wid, g, self.version) is not None:
+                    pass     # rejected/quarantined: counted by the screen
                 elif self.drop_rate and self._drop_rng.random() < self.drop_rate:
                     self.drops += 1
                 else:
-                    self._apply_locked(g, read_version, rows, w_fetch)
-            if self.version >= self.total:
+                    self._apply_locked(g, read_version, rows, w_fetch, wid=wid)
+            if self.fatal is not None or self.version >= self.total:
                 return None
             return self.W, self.version
 

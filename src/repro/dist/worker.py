@@ -40,6 +40,16 @@ def _sample_rows(shard, bs, rng):
     return np.asarray(rng.choice(shard, size=bs, replace=replace), np.int32)
 
 
+def _chaos_at(chaos: dict, kind: str, wid: int):
+    """Version threshold at which fault `kind` fires for this worker, or None.
+    Keys may arrive as str or int depending on how the plan was serialized."""
+    table = chaos.get(kind) or {}
+    for k, v in table.items():
+        if int(k) == wid:
+            return int(v)
+    return None
+
+
 def run_replay(conn, wid: int, meta: dict):
     Xa = _aug(np.asarray(meta["Xtr"], np.float64))
     y = np.asarray(meta["ytr"])
@@ -69,6 +79,14 @@ def run_live(conn, wid: int, meta: dict):
     shard = np.arange(wid % max(meta["n_workers"], 1), len(y), max(meta["n_workers"], 1))
     rng = np.random.default_rng(meta["seed"] * 9973 + wid)
 
+    # chaos injections (repro.chaos): thresholds are store versions, so the
+    # faults fire mid-run, after the sentinel's norm EMA has warmed up
+    chaos = meta.get("chaos") or {}
+    nan_at = _chaos_at(chaos, "nan_grad", wid)
+    boom_at = _chaos_at(chaos, "boom_grad", wid)
+    corrupt_at = _chaos_at(chaos, "corrupt_frame", wid)
+    corrupt_fired = False
+
     def compute(W, read_v):
         rows = _sample_rows(shard, bs, rng)
         if time_scale:
@@ -86,6 +104,15 @@ def run_live(conn, wid: int, meta: dict):
     while True:
         g, rows, w_at, rv = pending if pending is not None else compute(W, read_v)
         pending = None
+        if nan_at is not None and rv >= nan_at:
+            g = g + np.nan        # sick worker: every push non-finite
+        elif boom_at is not None and rv >= boom_at:
+            g = g * 1e12          # finite but divergent: slips a finite-only
+            #                       screen, trips the DivergenceDetector
+        if corrupt_at is not None and not corrupt_fired and rv >= corrupt_at:
+            corrupt_fired = True
+            conn.send((b"\xde\xad", wid))   # garbage frame, not a verb
+            conn.recv()   # chief drops the link -> EOFError -> process dies
         conn.send(("step", wid, g, rv, rows, w_at if need_fetch else None))
         if delayed_avg:
             # optimistic local step, then overlap the RTT with the next grad

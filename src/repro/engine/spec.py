@@ -54,6 +54,13 @@ DIST_MODES = ("replay", "live")
 # respawns it; "join" spawns an additional elastic worker (wid ignored).
 DIST_EVENT_OPS = ("kill", "restart", "join")
 
+# divergence-sentinel screening levels (repro.resilience, DESIGN.md §14):
+#   ""       — off (the default; zero overhead, bit-exact legacy trajectories)
+#   "finite" — reject non-finite losses/gradients (NaN/Inf never reach W)
+#   "full"   — "finite" plus loss-spike screening on the mesh carry and a
+#              norm-explosion screen (vs a running norm EMA) on the chief
+SENTINELS = ("", "finite", "full")
+
 # mesh-backend lr schedules; kept as a pure-python tuple (the resolver lives
 # in repro.optim.schedules.for_run, which imports jax) so the spec and the
 # launcher's argparse choices validate without the jax import cost.
@@ -170,6 +177,25 @@ class ExperimentSpec:
     ckpt_dir: str = ""             # "" -> checkpointing off
     ckpt_every: int = 0            # periodic full-state snapshot cadence (steps)
     keep_last: int = 3             # manifest retention (0 -> keep everything)
+    # ------------------------------------ resilience (repro.resilience, §14)
+    sentinel: str = ""             # SENTINELS level: "" | finite | full
+    sentinel_factor: float = 10.0  # spike/norm explosion multiplier vs the
+                                   # previous val loss (mesh) / norm EMA (dist)
+    rollback: bool = False         # dist live: on post-apply divergence,
+                                   # restore the last VERIFIED snapshot + lr
+                                   # backoff instead of failing the run
+    max_rollbacks: int = 3         # rollback budget before the run is fatal
+    lr_backoff: float = 0.5        # lr scale multiplied in at every rollback
+    quarantine_steps: int = 0      # dist live: versions a misbehaving worker's
+                                   # pushes are ignored for (0 -> never)
+    quarantine_after: int = 3      # consecutive rejections that trigger it
+    dist_supervise: bool = True    # live: supervisor thread respawns dead
+                                   # worker processes (capped backoff+jitter);
+                                   # ignored by replay (death is fatal there)
+    dist_lease_s: float = 0.0      # heartbeat lease: a worker silent this long
+                                   # is presumed hung and killed/respawned
+                                   # (0 -> process-death detection only)
+    dist_max_respawns: int = 3     # per-worker respawn budget before eviction
 
     def __post_init__(self):
         assert self.backend in BACKENDS, self.backend
@@ -253,6 +279,50 @@ class ExperimentSpec:
             raise ValueError(
                 "delayed_avg / dist_drop_rate / dist_time_scale / dist_events "
                 f"are dist-backend knobs (backend={self.backend!r})")
+        # ---- resilience rules (repro.resilience, DESIGN.md §14)
+        if self.sentinel not in SENTINELS:
+            raise ValueError(
+                f"unknown sentinel {self.sentinel!r}; known: "
+                f"{', '.join(repr(s) for s in SENTINELS)}")
+        if self.sentinel_factor <= 1.0:
+            raise ValueError(
+                f"sentinel_factor must be > 1 (got {self.sentinel_factor}): "
+                f"it multiplies the previous loss / norm EMA into a threshold")
+        if self.sentinel and self.backend not in ("mesh", "dist"):
+            raise ValueError(
+                f"sentinel={self.sentinel!r} screens the mesh carry or the "
+                f"dist chief's push path (backend={self.backend!r} has "
+                f"neither)")
+        if self.sentinel and self.backend == "dist" and self.dist_mode != "live":
+            raise ValueError(
+                "sentinel screening on the dist backend needs "
+                "dist_mode='live' (replay is the deterministic parity "
+                "oracle — rejecting pushes would break the schedule)")
+        remediation = self.rollback or self.quarantine_steps
+        if remediation and not (self.backend == "dist"
+                                and self.dist_mode == "live"):
+            raise ValueError(
+                "rollback / quarantine_steps remediate the live chief's "
+                f"store (backend={self.backend!r}, "
+                f"dist_mode={self.dist_mode!r})")
+        if remediation and not self.sentinel:
+            raise ValueError(
+                "rollback / quarantine_steps need a sentinel level to "
+                "detect divergence first (set sentinel='finite' or 'full')")
+        if self.max_rollbacks < 0 or self.quarantine_steps < 0:
+            raise ValueError(
+                f"max_rollbacks/quarantine_steps must be >= 0 "
+                f"(got {self.max_rollbacks}/{self.quarantine_steps})")
+        if not 0.0 < self.lr_backoff <= 1.0:
+            raise ValueError(
+                f"lr_backoff must be in (0, 1] (got {self.lr_backoff})")
+        if self.quarantine_after < 1:
+            raise ValueError(
+                f"quarantine_after must be >= 1 (got {self.quarantine_after})")
+        if self.dist_lease_s < 0 or self.dist_max_respawns < 0:
+            raise ValueError(
+                f"dist_lease_s/dist_max_respawns must be >= 0 "
+                f"(got {self.dist_lease_s}/{self.dist_max_respawns})")
 
     @property
     def resolved_topology(self) -> str:

@@ -69,7 +69,12 @@ class Report:
                                # applied update (applied_version - read_version)
     dist: dict = dataclasses.field(default_factory=dict)
                                # dist: run diagnostics (mode, n_workers, drops,
-                               # late, worker_exits, joins)
+                               # late, worker_exits, joins; with the
+                               # resilience layer armed also rejections/
+                               # rollbacks/supervisor counters)
+    resilience: dict = dataclasses.field(default_factory=dict)
+                               # mesh: sentinel outcome ({sentinel,
+                               # rejected_steps}) when spec.sentinel is set
 
     @property
     def final_loss(self) -> Optional[float]:

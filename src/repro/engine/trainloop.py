@@ -187,6 +187,15 @@ def fit(spec: ExperimentSpec, strategy, data=None, steps: Optional[int] = None,
     )
     step_fn = M.build_train_step(cfg, gcfg, opt, ctx, lr, n_micro=spec.micro,
                                  n_workers=c, strategy=strategy)
+    if spec.sentinel:
+        # divergence sentinel (DESIGN.md §14): screen every step ON DEVICE —
+        # a rejected step keeps the previous (params, gstate) carry, so one
+        # NaN batch costs a step of progress, never the run; the scan/jit
+        # fusion is unchanged because the guard is part of step_fn itself
+        from repro.resilience import wrap_step_sentinel
+
+        step_fn = wrap_step_sentinel(step_fn, spec.sentinel,
+                                     spec.sentinel_factor)
     chunked = spec.chunk_steps > 1
     dispatch = jax.jit(build_chunk_step(step_fn) if chunked else step_fn,
                        donate_argnums=(0, 1))
@@ -262,6 +271,7 @@ def fit(spec: ExperimentSpec, strategy, data=None, steps: Optional[int] = None,
 
     raw = []                   # (first_step, k, metrics) per dispatch
     m = None
+    rej = None                 # device-side rejected-step accumulator
     done = start_step
     compile_time_s = 0.0
     compiled_steps = 0         # steps covered by compiling dispatches
@@ -291,6 +301,11 @@ def fit(spec: ExperimentSpec, strategy, data=None, steps: Optional[int] = None,
                 compiled_steps += k
                 seen_sizes.add(k)
             done += k
+            if spec.sentinel:
+                # stays device-side (async jnp add): ONE host read after the
+                # loop, not a sync per dispatch
+                r = m["rejected"].sum() if chunked else m["rejected"]
+                rej = r if rej is None else rej + r
             if keep_history:
                 raw.append((done - k, k, m))
             if on_step is not None:
@@ -345,8 +360,14 @@ def fit(spec: ExperimentSpec, strategy, data=None, steps: Optional[int] = None,
     if not keep_history:
         history = history[-1:]
     final = dict(history[-1]) if history else {}
+    resilience = {}
+    if spec.sentinel:
+        resilience = {"sentinel": spec.sentinel,
+                      "rejected_steps": int(jax.device_get(rej))
+                      if rej is not None else 0}
     return Report(backend="mesh", spec=spec, history=history, final=final,
                   model=params, state=gstate, n_steps=done - start_step,
                   start_step=start_step, interrupted=stop["sig"] is not None,
                   compile_time_s=compile_time_s, warm_time_s=warm_time_s,
-                  warm_steps=max(done - start_step - compiled_steps, 0))
+                  warm_steps=max(done - start_step - compiled_steps, 0),
+                  resilience=resilience)

